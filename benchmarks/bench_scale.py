@@ -1,0 +1,18 @@
+"""Fig. 19: CF-KAN-1/2 accelerator table + headline scaling multipliers."""
+from repro.hw import cost_model
+
+
+def run(emit):
+    from repro.configs.cf_kan_1 import MODEL as M1
+    from repro.configs.cf_kan_2 import MODEL as M2
+    pt = cost_model.PRIOR_TINY
+    for name, m in (("cf_kan_1", M1), ("cf_kan_2", M2)):
+        c = cost_model.accelerator_cost(m.n_params)
+        emit(f"fig19_{name}", 0.0,
+             f"params={m.n_params};area_mm2={c.area_mm2:.2f};"
+             f"power_w={c.power_w:.3f};latency_ns={c.latency_ns:.0f};"
+             f"energy_nj={c.energy_nj:.1f}")
+        emit(f"fig19_{name}_vs_prior27", 0.0,
+             f"params_x={m.n_params / pt.params:.0f};"
+             f"area_x={c.area_mm2 / pt.area_mm2:.0f};"
+             f"power_x={c.power_w / pt.power_w:.1f}")

@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimbing harness: named config-override experiments per cell.
+
+Each experiment re-runs the roofline cost probes (flops / bytes / collective
+per-chip) and, for train cells, the production memory lowering — so every
+hypothesis -> change -> measure cycle in EXPERIMENTS.md §Perf is one entry
+here and fully reproducible:
+
+    python -m benchmarks.perf_iter --cell qwen_train --iter baseline
+    python -m benchmarks.perf_iter --cell qwen_train --all-iters
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Dict
+
+import jax
+import numpy as np
+
+from repro import analysis
+from repro.configs import SHAPES, get_arch
+from repro.dist import sharding as shlib
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from benchmarks import roofline as rl
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../results/perf")
+
+
+def _m(arch, **kw):
+    return dataclasses.replace(arch, model=dataclasses.replace(
+        arch.model, **kw))
+
+
+# --- experiment registry -----------------------------------------------------
+# cell -> iteration name -> (arch transform, rule overrides)
+
+CELLS: Dict[str, Dict[str, Any]] = {
+    # Cell A: biggest dense train job; memory-dominated, collective-heavy.
+    "qwen_train": {
+        "arch": "qwen2_72b", "shape": "train_4k",
+        "iters": {
+            "baseline": (lambda a: a, {}),
+            "i1_onehot_ce": (lambda a: _m(a, ce_impl="onehot"), {}),
+            "i2_prescan_cast": (
+                lambda a: _m(a, ce_impl="onehot", prescan_cast=True), {}),
+            "i3_kv_replicate": (
+                lambda a: _m(a, ce_impl="onehot", prescan_cast=True,
+                             kv_shard_mode="replicate"), {}),
+            "i4_seq_parallel": (
+                lambda a: _m(a, ce_impl="onehot", prescan_cast=True,
+                             kv_shard_mode="replicate",
+                             seq_shard_activations=True), {}),
+            "i5_accum16": (
+                lambda a: dataclasses.replace(
+                    _m(a, ce_impl="onehot", prescan_cast=True,
+                       kv_shard_mode="replicate",
+                       seq_shard_activations=True),
+                    accum_steps=16), {}),
+            # isolation: does SP alone beat SP+kv-replicate? (i3 raised
+            # compute 20% via replicated kv einsums)
+            "i6_sp_only": (
+                lambda a: _m(a, ce_impl="onehot", prescan_cast=True,
+                             seq_shard_activations=True), {}),
+        },
+    },
+    # Cell B: worst roofline fraction — kv=10/heads=40 don't divide the
+    # 16-way model axis; baseline falls back to head_dim sharding whose
+    # score contractions all-reduce [B,S,Kv,G,T] tensors.
+    "phi3_prefill": {
+        "arch": "phi3_medium_14b", "shape": "prefill_32k",
+        "iters": {
+            "baseline": (lambda a: a, {}),
+            "i1_pad_heads": (lambda a: _m(a, pad_attn_heads=16), {}),
+            "i2_pad_heads_serve_tp": (
+                lambda a: _m(a, pad_attn_heads=16), {"embed": ()}),
+        },
+    },
+    # Cell D (bonus): the one train cell still over v5e HBM after the main
+    # sweep — can bf16 params + bf16 grads close nemotron's memory gap?
+    "nemotron_train": {
+        "arch": "nemotron_4_340b", "shape": "train_4k",
+        "iters": {
+            "baseline": (lambda a: a, {}),
+            "i1_bf16_params": (
+                lambda a: dataclasses.replace(
+                    _m(a, param_dtype=__import__("jax.numpy",
+                                                 fromlist=["x"]).bfloat16),
+                    grad_dtype=__import__("jax.numpy",
+                                          fromlist=["x"]).bfloat16), {}),
+        },
+    },
+    # Cell C: most collective-bound serving cell — 1T MoE decode gathers
+    # expert weights every token in the baseline.
+    "kimi_decode": {
+        "arch": "kimi_k2_1t_a32b", "shape": "decode_32k",
+        "iters": {
+            "baseline": (lambda a: a, {}),
+            "i1_weights_stationary": (
+                lambda a: _m(a, moe_serve_stationary=True), {}),
+            "i2_ws_kv_replicate": (
+                lambda a: _m(a, moe_serve_stationary=True,
+                             kv_shard_mode="replicate"), {}),
+        },
+    },
+}
+
+
+def run_iter(cell: str, it: str, multi_pod: bool = False) -> Dict[str, Any]:
+    spec = CELLS[cell]
+    arch = spec["iters"][it][0](get_arch(spec["arch"]))
+    overrides = spec["iters"][it][1]
+    shape = SHAPES[spec["shape"]]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(dict(mesh.shape).values())))
+    m = arch.model
+    plen = len(m.block_pattern)
+    nfirst = len(m.first_layers)
+    d1, d2 = nfirst + plen, nfirst + 2 * plen
+    rec: Dict[str, Any] = {"cell": cell, "iter": it, "arch": spec["arch"],
+                           "shape": spec["shape"]}
+    t0 = time.time()
+    with shlib.override_rules(**overrides):
+        c1 = rl._lower_cost(rl._probe_arch(arch, d1, shape.seq_len), shape,
+                            mesh)
+        c2 = rl._lower_cost(rl._probe_arch(arch, d2, shape.seq_len), shape,
+                            mesh)
+        scale = (m.n_layers - d1) / plen
+        est = {k: c1[k] + (c2[k] - c1[k]) * scale
+               for k in ("flops", "bytes", "coll")}
+        terms = analysis.roofline_terms(est["flops"], est["bytes"],
+                                        est["coll"])
+        rec.update(per_device=est, **terms)
+        if shape.kind == "train":
+            with mesh:
+                fn, args = dr.build_cell(arch, shape, mesh)
+                compiled = jax.jit(fn, donate_argnums=(0, 1)).lower(
+                    *args).compile()
+                mem = compiled.memory_analysis()
+            rec["temp_gib"] = mem.temp_size_in_bytes / 2 ** 30
+            rec["arg_gib"] = mem.argument_size_in_bytes / 2 ** 30
+    mf = rl.model_flops(arch, shape)
+    rec["useful_flops_ratio"] = (mf["model_flops"]
+                                 / max(est["flops"] * n_dev, 1.0))
+    rec["probe_s"] = round(time.time() - t0, 1)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{cell}__{it}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(CELLS))
+    ap.add_argument("--iter", default=None)
+    ap.add_argument("--all-iters", action="store_true")
+    args = ap.parse_args()
+    iters = (list(CELLS[args.cell]["iters"]) if args.all_iters
+             else [args.iter])
+    for it in iters:
+        try:
+            r = run_iter(args.cell, it)
+            extra = (f" temp={r['temp_gib']:.1f}GiB" if "temp_gib" in r
+                     else "")
+            print(f"{args.cell}/{it}: compute={r['t_compute_s']:.4f}s "
+                  f"mem={r['t_memory_s']:.4f}s coll={r['t_collective_s']:.4f}s"
+                  f" dom={r['dominant']} useful={r['useful_flops_ratio']:.2f}"
+                  f"{extra} ({r['probe_s']}s)", flush=True)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            print(f"{args.cell}/{it}: FAIL {type(e).__name__}: {e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Assemble EXPERIMENTS.md tables from results/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "../results")
+
+
+def _load(pattern):
+    out = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def _gib(x):
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table():
+    rows = _load("dryrun/*.json")
+    print("\n### Dry-run matrix (lower+compile, memory & collectives)\n")
+    print("| arch | shape | mesh | compile s | HLO GFLOP/dev (loops-once) |"
+          " arg GiB/dev | temp GiB/dev | collective ops |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if not r.get("ok"):
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
+                  f"{r.get('error', '')[:60]} | | | | |")
+            continue
+        mem = r.get("memory", {})
+        arg = mem.get("argument_size_in_bytes", 0)
+        tmp = mem.get("temp_size_in_bytes", 0)
+        coll = {k: v for k, v in r.get("collective_bytes", {}).items() if v}
+        coll_s = ",".join(f"{k.replace('all-', '')}:{v/2**30:.1f}G"
+                          for k, v in coll.items()) or "-"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{r['compile_s']} | {r['flops']/1e9:.1f} | {_gib(arg)} | "
+              f"{_gib(tmp)} | {coll_s} |")
+
+
+def roofline_table():
+    rows = [r for r in _load("roofline/*.json") if r.get("ok")]
+    print("\n### Roofline baseline (per-chip, v5e constants; loop-corrected"
+          " probes)\n")
+    print("| arch | shape | compute s | memory s (upper) | collective s | "
+          "dominant | MODEL_FLOPS/HLO_FLOPs | N_active |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+              f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+              f"{r['n_active']/1e9:.1f}B |")
+
+
+def perf_table():
+    rows = _load("perf/*.json")
+    print("\n### Perf iterations (hillclimb cells)\n")
+    print("| cell | iteration | compute s | memory s (upper) | "
+          "collective s | dominant | temp GiB/dev | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        tmp = f"{r['temp_gib']:.1f}" if "temp_gib" in r else "-"
+        print(f"| {r['cell']} | {r['iter']} | {r['t_compute_s']:.4f} | "
+              f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['dominant']} | {tmp} | "
+              f"{r['useful_flops_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    dryrun_table()
+    roofline_table()
+    perf_table()

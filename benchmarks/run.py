@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. The dry-run/roofline benchmarks are
+separate entry points (they need XLA_FLAGS before jax init):
+  python -m repro.launch.dryrun --all [--multi-pod]
+  python -m benchmarks.roofline --all
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_asp_haq, bench_input_gen, bench_kan_sam,
+                            bench_kernels, bench_scale)
+
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for mod in (bench_asp_haq, bench_input_gen, bench_kan_sam, bench_scale,
+                bench_kernels):
+        try:
+            mod.run(emit)
+        except Exception as e:  # keep the harness going; report the failure
+            emit(f"{mod.__name__}.ERROR", 0.0, f"{type(e).__name__}:{e}")
+            import traceback
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

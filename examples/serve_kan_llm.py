@@ -1,0 +1,47 @@
+"""Serve a KAN-FFN LLM with batched requests — the paper's §1 thesis
+(KAN replacing transformer MLP blocks) running through the production
+serving path (prefill -> jitted decode steps, greedy).
+
+    PYTHONPATH=src python examples/serve_kan_llm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.transformer import LayerSpec, ModelConfig
+from repro.serve import decode as dec
+
+cfg = ModelConfig(
+    name="kan-llm-30m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+    d_ff=1024, vocab=4096, dtype=jnp.float32,
+    block_pattern=(LayerSpec("attn", "kan"),), kan_grid=8, kan_order=3)
+key = jax.random.PRNGKey(0)
+params = tfm.init_model(key, cfg)
+n = tfm.count_params(params)
+print(f"model: {cfg.n_layers}L d={cfg.d_model} KAN-FFN(G={cfg.kan_grid}) "
+      f"-> {n/1e6:.1f}M params")
+
+B, S, NEW = 8, 64, 48
+prompts = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+t0 = time.perf_counter()
+logits, cache = dec.prefill(params, cfg, {"tokens": prompts},
+                            max_len=S + NEW, last_only=True)
+tok = jnp.argmax(logits, axis=-1)
+print(f"prefill {B}x{S}: {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+step = jax.jit(lambda c, t, i: dec.decode_step(params, c, t, i, cfg))
+outs = [tok]
+t0 = time.perf_counter()
+for i in range(NEW - 1):
+    logits, cache = step(cache, tok, jnp.asarray(S + i))
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1)
+    outs.append(tok)
+jax.block_until_ready(tok)
+dt = time.perf_counter() - t0
+print(f"decode: {dt/ (NEW-1) * 1e3:.1f} ms/token, "
+      f"{B * (NEW-1) / dt:.0f} tok/s aggregate (CPU, interpret-mode kernels)")
+print("sample:", jnp.concatenate(outs, 1)[0, :12].tolist())
+print("OK")

@@ -1,0 +1,105 @@
+"""HLO analysis: collective traffic + roofline terms (TPU v5e constants).
+
+Collective cost model (ring algorithms, per-device bytes moved on ICI):
+  all-gather        operand x (n-1)          (operand = local shard)
+  reduce-scatter    operand x (n-1)/n
+  all-reduce        2 x operand x (n-1)/n    (RS + AG)
+  all-to-all        operand x (n-1)/n
+  collective-permute operand x 1
+
+``n`` is parsed from each op's replica_groups. Shapes in post-SPMD HLO are
+per-device, so the returned numbers are per-chip bytes moved.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e (target hardware; this container is CPU-only)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_OP_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b((?:f|bf|s|u|c)[0-9]+|pred)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8, "c64": 8, "c128": 16}
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_traffic(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-chip ICI bytes moved, by collective kind + total.
+
+    Optimized HLO shows only the op's OUTPUT shape (operands are bare
+    %names), so operand sizes are derived from the output and the collective
+    semantics:  AG operand = out/n;  AR operand = out;  RS operand = out*n;
+    A2A/permute operand = out.
+    """
+    out: Dict[str, float] = {"all-gather": 0.0, "all-reduce": 0.0,
+                             "reduce-scatter": 0.0, "all-to-all": 0.0,
+                             "collective-permute": 0.0}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m or m.group(2) == "-done":   # count start/plain, skip done
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[1][:m.start() - line.find("=") - 1]
+        toks = _SHAPE_RE.findall(lhs)
+        if not toks:
+            continue
+        o = _nbytes(*toks[-1])               # output (last tuple element)
+        n = max(_group_size(line, n_devices), 1)
+        if kind == "all-gather":
+            moved = o * (n - 1) / n
+        elif kind == "all-reduce":
+            moved = 2.0 * o * (n - 1) / n
+        elif kind == "reduce-scatter":
+            moved = float(o * (n - 1))
+        elif kind == "all-to-all":
+            moved = o * (n - 1) / n
+        else:  # collective-permute
+            moved = float(o)
+        out[kind] += moved
+    out["total"] = sum(out.values())
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    """Three roofline times (seconds) + dominant term."""
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    total = max(t_compute, t_memory, t_coll)
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom,
+            "bound_step_s": total,
+            "roofline_fraction": (t_compute / total) if total > 0 else 0.0}

@@ -1,0 +1,25 @@
+"""CF-KAN-1 (paper §4.D, Fig. 19): 39 MB high-performance operating point.
+Sensitivity-tiered grids (Alg. 2) + TD-P input mode in non-sensitive regions.
+Sized to ~39M 8-bit parameters: encoder G=7 (S+1=11 planes per edge)."""
+import dataclasses
+import jax.numpy as jnp
+from repro.configs import ArchConfig
+from repro.core.quant import ASPConfig
+from repro.models import cf_kan
+from repro.models.transformer import ModelConfig
+
+MODEL = cf_kan.CFKANConfig(
+    n_items=16384, hidden=108,
+    asp_enc=ASPConfig(grid_size=7, order=3, n_bits=8),
+    asp_dec=ASPConfig(grid_size=7, order=3, n_bits=8),
+    name="cf-kan-1")
+
+SMOKE_MODEL = dataclasses.replace(MODEL, n_items=256, hidden=16)
+
+# ArchConfig shim so the registry can serve CF-KAN too (dry-run uses the
+# dedicated cf-kan path in launch/dryrun.py).
+CONFIG = ArchConfig(model=ModelConfig(name="cf-kan-1", family="cfkan"),
+                    optimizer="adamw", learning_rate=1e-3,
+                    notes="paper's own arch; see MODEL")
+SMOKE = ArchConfig(model=ModelConfig(name="cf-kan-1", family="cfkan"),
+                   optimizer="adamw", learning_rate=1e-3)

@@ -1,0 +1,52 @@
+"""Grid extension (original-KAN §2.5 methodology, used by KAN-NeuroSim §3.4).
+
+During training, G is periodically increased by a user value E; the new,
+finer-grid coefficients are refit by least squares so the extended spline
+reproduces the coarse one. Because our grids are uniform over a fixed range,
+the refit matrix M with ``C_new = M @ C_old`` is shared by every edge:
+
+    M = argmin_M || A_new M - A_old ||_F ,  A_g = basis matrix on dense samples
+
+KAN-NeuroSim wraps this with hardware-budget checks (hw/neurosim.py): the
+extension is reverted to G_pre when the NeuroSim cost model rejects it or
+validation loss stops improving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import splines
+from repro.core.quant import ASPConfig
+
+Array = jax.Array
+
+
+@functools.lru_cache(maxsize=32)
+def _refit_matrix(g_old: int, g_new: int, order: int, x_min: float,
+                  x_max: float, n_samples: int = 2048):
+    x = jnp.linspace(x_min + 1e-4, x_max - 1e-4, n_samples)
+    a_old = splines.bspline_basis_uniform(x, x_min, x_max, g_old, order)
+    a_new = splines.bspline_basis_uniform(x, x_min, x_max, g_new, order)
+    ata = a_new.T @ a_new + 1e-8 * jnp.eye(a_new.shape[1])
+    return jnp.linalg.solve(ata, a_new.T @ a_old)  # [S_new, S_old]
+
+
+def extend_coeffs(coeffs: Array, asp_old: ASPConfig, asp_new: ASPConfig) -> Array:
+    """coeffs: [I, S_old, O] -> [I, S_new, O], same spline function."""
+    if (asp_old.order != asp_new.order or asp_old.x_min != asp_new.x_min
+            or asp_old.x_max != asp_new.x_max):
+        raise ValueError("grid extension changes G only")
+    m = _refit_matrix(asp_old.grid_size, asp_new.grid_size, asp_old.order,
+                      asp_old.x_min, asp_old.x_max)
+    return jnp.einsum("ts,iso->ito", m.astype(coeffs.dtype), coeffs)
+
+
+def extend_kan_layer(params: Dict[str, Array], asp_old: ASPConfig,
+                     asp_new: ASPConfig) -> Dict[str, Array]:
+    out = dict(params)
+    out["coeffs"] = extend_coeffs(params["coeffs"], asp_old, asp_new)
+    return out

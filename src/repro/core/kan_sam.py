@@ -1,0 +1,146 @@
+"""KAN-SAM: KAN sparsity-aware weight mapping (paper §3.3, Algorithm 1).
+
+B-spline locality means only K+1 of the K+G basis functions fire for any
+input. KAN-SAM scores every crossbar row (one row per (input-channel, basis)
+pair of the expanded coefficient matrix) by how often/strongly/stably its
+basis fires, and maps high-criticality rows to physical rows nearest the
+bit-line clamp, where IR-drop error is smallest.
+
+Phases (verbatim from Algorithm 1):
+  A — one pass over the training set: per basis, activation count, sum and
+      sum-of-squares of the (non-negative) basis value when active.
+  B — coefficients are 8-bit quantized and bit-sliced over a fixed 8-column
+      template (quant.bit_slices); only rows (distance) are optimized.
+  C — criticality C_w = alpha * J + beta * S * J with
+      J = p * mu * |c'|_Q (expected contribution) and
+      S = 1 / (1 + CV), CV = sigma / (mu + eps) (stability squashing).
+  Mapping — sort by C_w descending, assign rows nearest→farthest.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.quant import ASPConfig
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class BasisStats:
+    """Streaming Phase-A statistics per (input_channel, basis) = crossbar row."""
+    cnt: Array   # [I, S] activation counts
+    s1: Array    # [I, S] sum of basis values when active
+    s2: Array    # [I, S] sum of squared basis values
+    n_samples: int
+
+    @property
+    def p(self) -> Array:
+        return self.cnt / max(self.n_samples, 1)
+
+    @property
+    def mu(self) -> Array:
+        return self.s1 / jnp.maximum(self.cnt, 1.0)
+
+    @property
+    def var(self) -> Array:
+        m = self.mu
+        return jnp.maximum(self.s2 / jnp.maximum(self.cnt, 1.0) - m * m, 0.0)
+
+
+def init_stats(in_dim: int, asp: ASPConfig) -> BasisStats:
+    z = jnp.zeros((in_dim, asp.n_basis), dtype=jnp.float32)
+    return BasisStats(cnt=z, s1=z, s2=z, n_samples=0)
+
+
+@jax.jit
+def _accumulate(cnt, s1, s2, basis):
+    active = (basis > 0).astype(jnp.float32)
+    cnt = cnt + active.sum(axis=0)
+    s1 = s1 + basis.sum(axis=0)
+    s2 = s2 + (basis * basis).sum(axis=0)
+    return cnt, s1, s2
+
+
+def update_stats(stats: BasisStats, x: Array, asp: ASPConfig,
+                 hemi: Optional[Array] = None) -> BasisStats:
+    """Phase A accumulation for one batch. x: [B, I] (bounded to range)."""
+    if hemi is None:
+        hemi = quant.hemi_for(asp)
+    basis = quant.quantized_basis(x, hemi, asp)  # [B, I, S], b >= 0
+    cnt, s1, s2 = _accumulate(stats.cnt, stats.s1, stats.s2, basis)
+    return BasisStats(cnt=cnt, s1=s1, s2=s2,
+                      n_samples=stats.n_samples + x.shape[0])
+
+
+def collect_stats(batches: Iterable[Array], asp: ASPConfig,
+                  in_dim: int) -> BasisStats:
+    stats = init_stats(in_dim, asp)
+    for x in batches:
+        stats = update_stats(stats, x, asp)
+    return stats
+
+
+def criticality(stats: BasisStats, coeff_codes: Array, *,
+                alpha: float = 0.5, beta: float = 0.5,
+                eps: float = 1e-6) -> Array:
+    """Phase C: criticality score per crossbar row.
+
+    coeff_codes: [I, S, O] int8 — the row's digital magnitude is aggregated
+    over its O bit-sliced columns (rows are optimized, columns are a fixed
+    template — Alg. 1 assumption).
+    Returns C_w: [I, S] float32.
+    """
+    if not np.isclose(alpha + beta, 1.0):
+        raise ValueError("Algorithm 1 requires alpha + beta = 1")
+    p = stats.p
+    mu = stats.mu
+    sigma = jnp.sqrt(stats.var)
+    cv = sigma / (mu + eps)
+    s_stab = 1.0 / (1.0 + cv)                       # monotone squash to (0,1]
+    mag = jnp.abs(coeff_codes.astype(jnp.float32)).mean(axis=-1)  # [I, S]
+    j_contrib = p * mu * mag                         # expected contribution
+    return alpha * j_contrib + beta * s_stab * j_contrib
+
+
+def row_mapping(c_w: Array, row_order: Optional[np.ndarray] = None
+                ) -> Tuple[Array, Array]:
+    """Row mapping policy: sort rows by criticality (high→low), assign to
+    physical rows nearest→farthest following ``row_order``.
+
+    c_w: [I, S] → flattened logical rows R = I*S.
+    row_order: [R] physical row indices sorted nearest-first (defaults to
+       0..R-1, i.e. row 0 adjacent to the clamp).
+    Returns (phys_of_logical [R], logical_of_phys [R]) int32 permutations.
+    """
+    r = c_w.size
+    if row_order is None:
+        row_order = np.arange(r)
+    order = jnp.argsort(-c_w.reshape(-1), stable=True)  # logical rows, best 1st
+    phys_of_logical = jnp.zeros(r, dtype=jnp.int32)
+    phys_of_logical = phys_of_logical.at[order].set(
+        jnp.asarray(row_order, dtype=jnp.int32))
+    logical_of_phys = jnp.argsort(phys_of_logical).astype(jnp.int32)
+    return phys_of_logical, logical_of_phys
+
+
+def sam_attenuation(c_w: Array, atten_by_position: Array) -> Array:
+    """Effective per-logical-row attenuation under the KAN-SAM mapping.
+
+    atten_by_position: [R] IR-drop attenuation of each *physical* row.
+    Physical positions repeat per array (row r sits at distance r mod As), so
+    the nearest-first RowOrder sorts physical rows by DESCENDING attenuation
+    (one near slot per array comes before any far slot) — Alg. 1's
+    "precomputed row order (nearest -> farthest)". Returns [I, S] attenuation
+    experienced by each logical row after mapping.
+    """
+    att_np = np.asarray(atten_by_position)
+    row_order = np.argsort(-att_np, kind="stable")   # nearest-first
+    phys_of_logical, _ = row_mapping(c_w, row_order=row_order)
+    att = jnp.asarray(atten_by_position)[phys_of_logical]
+    return att.reshape(c_w.shape)

@@ -1,0 +1,264 @@
+"""ASP-KAN-HAQ: Alignment-Symmetry and PowerGap KAN hardware-aware quantization.
+
+Paper §3.1. Two constraints tie the B-spline knot grid to the integer input
+quantization grid:
+
+* **Alignment** (Eq. 4): ``G * L <= 2^n`` with integer L — every knot interval
+  contains exactly L quantization steps, so the knot grid and quantization
+  grid have zero offset and ONE LUT serves every basis function of every edge.
+
+* **PowerGap** (Eq. 5): ``G * 2^D <= 2^n`` — L is a power of two, so the
+  global/local decode splits into pure bit arithmetic:
+
+      segment = q >> LD          (global information — which knot interval)
+      local   = q &  (2^LD - 1)  (local information — position inside it)
+
+  On the paper's silicon this halves decoder+MUX area; on TPU it *is* the
+  implementation: two VPU integer ops replace any gather/searchsorted.
+
+* **Symmetry**: with midpoint sampling ``u = (local + 0.5) / L`` the aligned
+  cardinal basis satisfies ``taps[L-1-local, t] == taps[local, K-t]``, so only
+  the lower half of the table is stored — the Sharable-Hemi LUT (SH-LUT).
+
+The jointly optimal exponent is ``LD = floor(log2(2^n / G))`` (Eq. 6), which
+constrains inputs to ``[0, G * 2^LD - 1]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import splines
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ASPConfig:
+    """Static configuration of one ASP-KAN-HAQ quantized spline family."""
+    grid_size: int = 5        # G
+    order: int = 3            # K
+    n_bits: int = 8           # input quantization bit-width n
+    x_min: float = -1.0
+    x_max: float = 1.0
+    coeff_bits: int = 8       # ci' quantization (paper: 8-bit)
+
+    def __post_init__(self):
+        if self.grid_size > 2 ** self.n_bits:
+            raise ValueError(
+                f"G={self.grid_size} exceeds 2^n={2**self.n_bits}: Eq. (4) "
+                f"unsatisfiable — no integer L with G*L <= 2^n.")
+
+    # --- Eq. (6): jointly optimal power-of-two levels-per-interval ---
+    @property
+    def ld(self) -> int:
+        """LD: log2 of quantization levels per knot interval."""
+        return int(np.floor(np.log2((2 ** self.n_bits) / self.grid_size)))
+
+    @property
+    def levels_per_interval(self) -> int:
+        return 1 << self.ld
+
+    @property
+    def n_levels(self) -> int:
+        """Usable input range [0, G * 2^LD - 1] (<= 2^n)."""
+        return self.grid_size * self.levels_per_interval
+
+    @property
+    def n_basis(self) -> int:
+        return self.grid_size + self.order
+
+    @property
+    def n_taps(self) -> int:
+        return self.order + 1
+
+    @property
+    def step(self) -> float:
+        return (self.x_max - self.x_min) / self.n_levels
+
+    def with_grid(self, grid_size: int) -> "ASPConfig":
+        return dataclasses.replace(self, grid_size=grid_size)
+
+
+# ---------------------------------------------------------------------------
+# LUT construction (host side, numpy — done once per (K, G, n) family).
+# ---------------------------------------------------------------------------
+
+def _cardinal_taps_np(u: np.ndarray, order: int) -> np.ndarray:
+    """Host-side (pure numpy) mirror of splines.cardinal_taps — the LUT is
+    built offline exactly as it would be programmed into silicon, so it must
+    not become a tracer when a model is traced/rematerialized."""
+    taps = [np.ones_like(u)]
+    for k in range(1, order + 1):
+        nxt = []
+        for t in range(k + 1):
+            acc = np.zeros_like(u)
+            if 0 <= t - 1 < k:
+                acc = acc + (u + k - t) / k * taps[t - 1]
+            if t < k:
+                acc = acc + (1.0 - u + t) / k * taps[t]
+            nxt.append(acc)
+        taps = nxt
+    return np.stack(taps, axis=-1)
+
+
+def build_full_lut(cfg: ASPConfig, dtype=jnp.float32) -> Array:
+    """Full aligned LUT: [2^LD, K+1] tap values at quantization midpoints.
+
+    Because of Alignment, this single table serves every segment of every
+    edge spline in the whole network (the paper's shared-LUT claim).
+    """
+    L = cfg.levels_per_interval
+    u = (np.arange(L, dtype=np.float64) + 0.5) / L
+    taps = _cardinal_taps_np(u, cfg.order)
+    return jnp.asarray(taps, dtype=dtype)
+
+
+def build_sh_lut(cfg: ASPConfig, dtype=jnp.float32) -> Array:
+    """Sharable-Hemi LUT: lower half [2^(LD-1), K+1] of the full table.
+
+    The upper half is recovered by index reflection + tap reversal
+    (``full[L-1-loc, t] == hemi[loc, K-t]``) — the paper's 50% LUT saving.
+    For odd L (LD=0 never happens for G<=2^n/1... only if L==1) we simply
+    store ceil(L/2) rows; the middle row is its own reflection.
+    """
+    full = build_full_lut(cfg, dtype)
+    L = cfg.levels_per_interval
+    half = (L + 1) // 2
+    return full[:half]
+
+
+def sh_lut_lookup(hemi: Array, local: Array, cfg: ASPConfig) -> Array:
+    """Gather taps from the hemi table with reflection.
+
+    local: [...] int32 in [0, L-1] -> taps [..., K+1].
+    """
+    L = cfg.levels_per_interval
+    half = hemi.shape[0]
+    reflected = local >= half
+    idx = jnp.where(reflected, L - 1 - local, local)
+    taps = hemi[idx]  # [..., K+1]
+    return jnp.where(reflected[..., None], taps[..., ::-1], taps)
+
+
+# ---------------------------------------------------------------------------
+# Input quantization (PowerGap decode is just shift/mask).
+# ---------------------------------------------------------------------------
+
+def quantize_input(x: Array, cfg: ASPConfig) -> Array:
+    """Float -> aligned integer code in [0, G*2^LD - 1]."""
+    q = jnp.floor((x - cfg.x_min) / cfg.step)
+    return jnp.clip(q, 0, cfg.n_levels - 1).astype(jnp.int32)
+
+
+def dequantize_input(q: Array, cfg: ASPConfig) -> Array:
+    """Integer code -> midpoint of its quantization cell."""
+    return cfg.x_min + (q.astype(jnp.float32) + 0.5) * cfg.step
+
+
+def powergap_decode(q: Array, cfg: ASPConfig) -> Tuple[Array, Array]:
+    """PowerGap split: (segment = q >> LD, local = q & (2^LD - 1))."""
+    seg = jax.lax.shift_right_logical(q, cfg.ld)
+    local = jax.lax.bitwise_and(q, cfg.levels_per_interval - 1)
+    return seg, local
+
+
+def fake_quantize_input(x: Array, cfg: ASPConfig) -> Array:
+    """Straight-through-estimator fake quant for quantization-aware training."""
+    q = dequantize_input(quantize_input(x, cfg), cfg)
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# ---------------------------------------------------------------------------
+# Quantized basis evaluation — the heart of ASP-KAN-HAQ.
+# ---------------------------------------------------------------------------
+
+def quantized_taps(x: Array, hemi: Array, cfg: ASPConfig) -> Tuple[Array, Array]:
+    """Quantize x and return (segment [..., ], taps [..., K+1]) via SH-LUT."""
+    q = quantize_input(x, cfg)
+    seg, local = powergap_decode(q, cfg)
+    return seg, sh_lut_lookup(hemi, local, cfg)
+
+
+def quantized_basis(x: Array, hemi: Array, cfg: ASPConfig) -> Array:
+    """Dense quantized basis vector [..., G+K] (ACIM word-line values)."""
+    seg, taps = quantized_taps(x, hemi, cfg)
+    return splines.basis_from_taps(seg, taps, cfg.grid_size, cfg.order)
+
+
+# ---------------------------------------------------------------------------
+# Coefficient quantization (ci' -> int8 with per-output-channel scale).
+# ---------------------------------------------------------------------------
+
+def quantize_coeffs(c: Array, cfg: ASPConfig, axis: int = -1) -> Tuple[Array, Array]:
+    """Symmetric per-channel int quantization of spline coefficients ci'.
+
+    Returns (int8 codes, float scale broadcastable against ``c``). The paper
+    stores ci' as 8-bit values bit-sliced across a fixed 8-column template
+    (Alg. 1 Phase B); the int8 code here is exactly that digital magnitude.
+    """
+    qmax = 2 ** (cfg.coeff_bits - 1) - 1
+    amax = jnp.max(jnp.abs(c), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    codes = jnp.clip(jnp.round(c / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_coeffs(codes: Array, scale: Array) -> Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def bit_slices(codes: Array) -> Array:
+    """Alg. 1 Phase B: int8 magnitude -> 8 binary slices (MSB..LSB).
+
+    codes: [...] int8 -> [..., 8] uint8 in {0,1}; sign handled separately by
+    the CIM simulator (differential pair convention).
+    """
+    mag = jnp.abs(codes.astype(jnp.int32))
+    shifts = jnp.arange(7, -1, -1, dtype=jnp.int32)
+    return ((mag[..., None] >> shifts) & 1).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# Conventional (misaligned) PTQ baseline — for Fig. 12/13 comparisons.
+# ---------------------------------------------------------------------------
+
+def conventional_quantized_basis(x: Array, cfg: ASPConfig) -> Array:
+    """Post-training-quantization baseline WITHOUT alignment.
+
+    The quantization grid spans [x_min, x_max] with 2^n uniform levels that do
+    NOT align with knot boundaries (non-zero offset, non-integer levels per
+    interval). Hardware-wise each basis function then needs its own LUT
+    (unique input->output mapping): this function exists so tests/benchmarks
+    can quantify the accuracy parity and the cost model can quantify the
+    area/energy gap (Figs. 12/13).
+    """
+    n = 2 ** cfg.n_bits
+    step = (cfg.x_max - cfg.x_min) / n
+    q = jnp.clip(jnp.floor((x - cfg.x_min) / step), 0, n - 1)
+    xq = cfg.x_min + (q + 0.5) * step
+    return splines.bspline_basis_uniform(
+        xq, cfg.x_min, cfg.x_max, cfg.grid_size, cfg.order)
+
+
+@functools.lru_cache(maxsize=64)
+def cached_hemi_np(grid_size: int, order: int, n_bits: int,
+                   x_min: float, x_max: float) -> np.ndarray:
+    cfg = ASPConfig(grid_size=grid_size, order=order, n_bits=n_bits,
+                    x_min=x_min, x_max=x_max)
+    L = cfg.levels_per_interval
+    u = (np.arange(L, dtype=np.float64) + 0.5) / L
+    full = _cardinal_taps_np(u, cfg.order).astype(np.float32)
+    return full[:(L + 1) // 2]
+
+
+def hemi_for(cfg: ASPConfig, dtype=jnp.float32) -> Array:
+    """Cached SH-LUT for a config (one table per (G,K,n) family, as on chip)."""
+    return jnp.asarray(
+        cached_hemi_np(cfg.grid_size, cfg.order, cfg.n_bits, cfg.x_min,
+                       cfg.x_max), dtype=dtype)

@@ -1,0 +1,81 @@
+"""Algorithm 2: Sensitivity-based Grid Assignment for KAN-NeuroSim (§3.4).
+
+Phase 1 — after warm-up training, profile each layer's sensitivity as the
+validation expectation of the mean squared gradient of the loss w.r.t. that
+layer's spline coefficients:
+
+    S_i = E_val[ (1/M_i) * sum_j (dL/dc_ij)^2 ]
+
+Phase 2 — percentile classification (top 33% HIGH, middle MEDIUM, bottom 33%
+LOW) and grid-template assignment G_high / G_med / G_low.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GridAssignment:
+    sensitivities: Dict[str, float]
+    classes: Dict[str, str]          # layer -> "HIGH" | "MEDIUM" | "LOW"
+    grids: Dict[str, int]            # layer -> assigned G
+
+
+def layer_sensitivities(loss_fn: Callable, params, val_batches,
+                        coeff_paths: Sequence[str]) -> Dict[str, float]:
+    """Phase 1. ``coeff_paths`` are '/'-joined pytree paths selecting each
+    layer's spline-coefficient leaves; sensitivity is averaged over
+    ``val_batches`` (iterable of loss_fn batch args)."""
+    grad_fn = jax.grad(loss_fn)
+    acc = {p: 0.0 for p in coeff_paths}
+    n = 0
+    for batch in val_batches:
+        g = grad_fn(params, *batch)
+        flat = _flatten_with_paths(g)
+        for p in coeff_paths:
+            leaf = flat[p]
+            acc[p] += float(jnp.mean(leaf.astype(jnp.float32) ** 2))
+        n += 1
+    return {p: v / max(n, 1) for p, v in acc.items()}
+
+
+def assign_grids(sens: Dict[str, float], *, g_high: int, g_med: int,
+                 g_low: int) -> GridAssignment:
+    """Phase 2: percentile thresholds at 67/33 (Alg. 2 lines 6-20)."""
+    names = list(sens.keys())
+    vals = np.array([sens[n] for n in names])
+    tau_high = np.percentile(vals, 67)
+    tau_low = np.percentile(vals, 33)
+    classes, grids = {}, {}
+    for n, s in zip(names, vals):
+        if s >= tau_high:
+            classes[n], grids[n] = "HIGH", g_high
+        elif s >= tau_low:
+            classes[n], grids[n] = "MEDIUM", g_med
+        else:
+            classes[n], grids[n] = "LOW", g_low
+    return GridAssignment(sensitivities=dict(zip(names, map(float, vals))),
+                          classes=classes, grids=grids)
+
+
+def _flatten_with_paths(tree) -> Dict[str, Array]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)

@@ -1,0 +1,167 @@
+"""B-spline machinery for KAN layers.
+
+Two evaluation paths are provided:
+
+* ``bspline_basis`` — the generic Cox–de Boor recursion over an explicit
+  (uniformly extended) knot vector. This is the mathematical oracle used by
+  tests and by grid extension refits. It is O(K^2) per point and is what the
+  paper calls "recursive computational methods [7]" — accurate but expensive.
+
+* ``cardinal_taps`` — the uniform-grid specialization: for a point with local
+  coordinate ``u`` inside any knot interval, the K+1 *active* basis values
+  depend only on ``u`` (translation invariance of uniform B-splines). This is
+  the property the paper exploits for its shared LUT ("the uniform nodal
+  distribution ... ensures that B(X) functional representations remain
+  consistent across varying knot grid intervals", §2.1). The ASP-KAN-HAQ LUT
+  (quant.py) is built by sampling ``cardinal_taps`` at the aligned
+  quantization midpoints.
+
+Conventions
+-----------
+A KAN edge spline over range ``[x_min, x_max]`` with grid size ``G`` and
+order ``K`` has ``G + K`` basis functions ``B_0 .. B_{G+K-1}`` over the
+uniformly *extended* knot vector
+
+    t_i = x_min + (i - K) * h,   h = (x_max - x_min) / G,   i = 0 .. G + 2K.
+
+For x in segment ``s`` (``x in [x_min + s h, x_min + (s+1) h)``), the active
+bases are ``B_s .. B_{s+K}``; tap ``t`` (0..K) corresponds to basis index
+``s + t`` and has value ``M_K(u + K - t)`` where ``M_K`` is the cardinal
+B-spline and ``u`` the local coordinate in [0, 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def make_knots(x_min: float, x_max: float, grid_size: int, order: int) -> np.ndarray:
+    """Uniformly extended knot vector t_0 .. t_{G+2K} (numpy, host side)."""
+    h = (x_max - x_min) / grid_size
+    i = np.arange(grid_size + 2 * order + 1, dtype=np.float64)
+    return x_min + (i - order) * h
+
+
+def bspline_basis(x: Array, knots: Array, order: int) -> Array:
+    """Cox–de Boor: all G+K basis values at each point.
+
+    Args:
+      x: [...] points.
+      knots: [G + 2K + 1] knot vector (uniformly extended).
+      order: spline order K (degree).
+
+    Returns:
+      [..., G + K] basis values (rows sum to 1 inside the grid range).
+    """
+    knots = jnp.asarray(knots, dtype=jnp.result_type(x, jnp.float32))
+    x = x[..., None]  # [..., 1]
+    # Degree 0: indicator of [t_i, t_{i+1}). One per knot interval.
+    b = jnp.where((x >= knots[:-1]) & (x < knots[1:]), 1.0, 0.0)
+    for k in range(1, order + 1):
+        t_i = knots[: -(k + 1)]
+        t_ik = knots[k:-1]
+        t_i1 = knots[1:-k]
+        t_ik1 = knots[k + 1:]
+        left = (x - t_i) / (t_ik - t_i) * b[..., :-1]
+        right = (t_ik1 - x) / (t_ik1 - t_i1) * b[..., 1:]
+        b = left + right
+    return b
+
+
+def cardinal_taps(u: Array, order: int) -> Array:
+    """K+1 active uniform-B-spline values at local coordinate u in [0, 1).
+
+    ``taps[..., t] = M_K(u + K - t)`` so that ``taps[..., t]`` is the value of
+    basis ``B_{s+t}`` for a point in segment ``s``. Works on traced arrays.
+
+    Recurrence (uniform de Boor): with A_0 = [1],
+      A_k[t] = ((u + k - t) / k) * A_{k-1}[t-1] + ((1 - u + t) / k) * A_{k-1}[t]
+    """
+    u = jnp.asarray(u)
+    taps = [jnp.ones_like(u)]
+    for k in range(1, order + 1):
+        nxt = []
+        for t in range(k + 1):
+            prev_tm1 = taps[t - 1] if 0 <= t - 1 < k else None
+            prev_t = taps[t] if t < k else None
+            acc = jnp.zeros_like(u)
+            if prev_tm1 is not None:
+                acc = acc + (u + k - t) / k * prev_tm1
+            if prev_t is not None:
+                acc = acc + (1.0 - u + t) / k * prev_t
+            nxt.append(acc)
+        taps = nxt
+    return jnp.stack(taps, axis=-1)
+
+
+def locate(x: Array, x_min: float, x_max: float, grid_size: int) -> Tuple[Array, Array]:
+    """Float path segment/local-coordinate split (un-quantized oracle).
+
+    Returns (segment int32 in [0, G-1], u float in [0, 1)). Points outside the
+    range are clamped to the first/last segment (standard KAN behaviour).
+    """
+    h = (x_max - x_min) / grid_size
+    z = (x - x_min) / h
+    seg = jnp.clip(jnp.floor(z), 0, grid_size - 1).astype(jnp.int32)
+    u = jnp.clip(z - seg, 0.0, 1.0)
+    return seg, u
+
+
+def basis_from_taps(seg: Array, taps: Array, grid_size: int, order: int) -> Array:
+    """Scatter K+1 taps into the dense [G+K] basis vector.
+
+    Implemented as compare-and-add against an iota (no scatter op) — this is
+    the same local→global routing trick the fused Pallas kernel uses, which
+    itself mirrors the paper's PowerGap MUX/DEMUX decomposition.
+
+    Args:
+      seg: [...] int32 segment indices.
+      taps: [..., K+1] active basis values.
+    Returns:
+      [..., G+K] dense basis values.
+    """
+    n_basis = grid_size + order
+    i = jnp.arange(n_basis, dtype=jnp.int32)
+    t = i - seg[..., None]  # [..., G+K]; tap index for each basis slot
+    out = jnp.zeros(taps.shape[:-1] + (n_basis,), dtype=taps.dtype)
+    for tap in range(order + 1):
+        out = out + jnp.where(t == tap, taps[..., tap:tap + 1], 0.0)
+    return out
+
+
+def bspline_basis_uniform(x: Array, x_min: float, x_max: float,
+                          grid_size: int, order: int) -> Array:
+    """Dense [..., G+K] basis via the cardinal-taps fast path (float oracle)."""
+    seg, u = locate(x, x_min, x_max, grid_size)
+    taps = cardinal_taps(u, order)
+    return basis_from_taps(seg, taps, grid_size, order)
+
+
+@functools.partial(jax.jit, static_argnames=("grid_size", "order"))
+def spline_eval_reference(x: Array, coeffs: Array, x_min: float, x_max: float,
+                          grid_size: int, order: int) -> Array:
+    """Reference spline(x) = sum_i c_i B_i(x) for a single edge.
+
+    x: [...], coeffs: [G+K] -> [...]."""
+    basis = bspline_basis_uniform(x, x_min, x_max, grid_size, order)
+    return jnp.einsum("...i,i->...", basis, coeffs)
+
+
+def lstsq_fit_coeffs(x: Array, y: Array, x_min: float, x_max: float,
+                     grid_size: int, order: int, reg: float = 1e-8) -> Array:
+    """Least-squares fit of spline coefficients to (x, y) samples.
+
+    Used by grid extension (original-KAN style refit when G grows) and by
+    layer init. x: [N], y: [N, ...out] -> coeffs [G+K, ...out].
+    """
+    A = bspline_basis_uniform(x, x_min, x_max, grid_size, order)  # [N, G+K]
+    AtA = A.T @ A + reg * jnp.eye(A.shape[-1], dtype=A.dtype)
+    Aty = A.T @ y.reshape(y.shape[0], -1)
+    sol = jnp.linalg.solve(AtA, Aty)
+    return sol.reshape((A.shape[-1],) + y.shape[1:])

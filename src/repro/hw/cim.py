@@ -1,0 +1,108 @@
+"""RRAM-ACIM non-ideality model (paper §3.3, §4.C).
+
+IR-drop: parasitic bit-line resistance attenuates the current contribution of
+rows far from the clamping circuit. First-order model (consistent with the
+TSMC 22nm measurements the paper cites [13][14]): a cell at physical position
+``d`` (0 = adjacent to the clamp) on an array of ``As`` rows sees
+
+    atten(d) = 1 - gamma(As) * (d + 1) / As ,   gamma(As) = gamma0 * As / 128
+
+gamma grows linearly with array size (line resistance and aggregate line
+current both scale with As) — this is what makes Fig. 18's degradation grow
+from As=128 to As=1024 and is the error KAN-SAM steers criticality away from.
+
+Partial-sum stochastic error: per-array readout noise with std
+``sigma_psum`` (measured-chip statistics), applied on top of the
+deterministic kernel output (Gaussian closure over arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kernel_ops
+
+Array = jax.Array
+
+# Calibration: gamma0 chosen so that a uniform (non-SAM) mapping on As=1024
+# produces ~1% MAC degradation, matching the order of accuracy losses the
+# paper reports before SAM (Fig. 18 baseline).
+GAMMA0_DEFAULT = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    array_size: int = 256          # physical rows per bit-line (As)
+    adc_bits: int = 8
+    gamma0: float = GAMMA0_DEFAULT
+    sigma_psum: float = 0.3        # per-array readout noise std (LSB units)
+    input_bits: int = 8            # WL DAC resolution (TM-DV-IG: 2N)
+    # ADC full-scale = adc_in_scale * array_size. KAN word lines are
+    # (K+1)-of-(K+G) sparse with mean basis value ~1/S, so the calibrated
+    # range (NeuroSim-style) is far below the worst-case sum; 0.2*As gives
+    # ~4x headroom over the typical bit-slice partial sum.
+    adc_in_scale: float = 0.2
+
+    def gamma(self) -> float:
+        return self.gamma0 * self.array_size / 128.0
+
+
+def row_attenuation(n_rows: int, cfg: CIMConfig) -> Array:
+    """Attenuation of each physical row position, nearest-clamp first.
+
+    Positions repeat per physical array: row r sits at d = r % As.
+    """
+    d = jnp.arange(n_rows) % cfg.array_size
+    return 1.0 - cfg.gamma() * (d + 1.0) / cfg.array_size
+
+
+def quantize_wl(v: Array, bits: int, v_max: float = 1.0) -> Array:
+    """WL input DAC quantization (TM-DV-IG charge levels)."""
+    levels = 2 ** bits - 1
+    return jnp.round(jnp.clip(v, 0, v_max) / v_max * levels) / levels * v_max
+
+
+def cim_forward(v: Array, w_codes: Array, cfg: CIMConfig, *,
+                atten_of_logical: Optional[Array] = None,
+                rng: Optional[Array] = None) -> Array:
+    """Simulated crossbar MAC: out ~= v @ w_codes with analog error.
+
+    v: [..., R] word-line values in [0, 1] (basis activations)
+    w_codes: [R, C] int8
+    atten_of_logical: [R] per-logical-row attenuation. Default = uniform
+      (identity) mapping, i.e. logical row r at physical position r % As.
+      KAN-SAM passes core.kan_sam.sam_attenuation(...) instead.
+    rng: optional key for stochastic partial-sum noise.
+    """
+    r = v.shape[-1]
+    if atten_of_logical is None:
+        atten_of_logical = row_attenuation(r, cfg)
+    vq = quantize_wl(v, cfg.input_bits)
+    out = kernel_ops.cim_mac(vq, w_codes, atten_of_logical,
+                             array_size=cfg.array_size,
+                             adc_bits=cfg.adc_bits,
+                             in_scale=cfg.adc_in_scale)
+    if rng is not None:
+        n_arrays = -(-r // cfg.array_size)
+        fs = cfg.array_size * cfg.adc_in_scale
+        lsb = fs / (2 ** cfg.adc_bits - 1)
+        # 8 bit-slices recombined with weights 2^k: total noise variance
+        # sigma^2 * n_arrays * sum(4^k) per output.
+        scale = cfg.sigma_psum * lsb * jnp.sqrt(
+            n_arrays * sum(4.0 ** k for k in range(8)) / 8.0)
+        out = out + scale * jax.random.normal(rng, out.shape)
+    return out
+
+
+def mac_error_rate(v: Array, w_codes: Array, cfg: CIMConfig,
+                   atten_of_logical: Optional[Array] = None) -> float:
+    """Mean relative MAC error vs the ideal digital result (paper's metric
+    for the per-array-size error tables extracted from chips)."""
+    from repro.kernels import ref as kref
+    ideal = kref.cim_mac_ideal(v, w_codes)
+    actual = cim_forward(v, w_codes, cfg, atten_of_logical=atten_of_logical)
+    denom = jnp.maximum(jnp.mean(jnp.abs(ideal)), 1e-6)
+    return float(jnp.mean(jnp.abs(actual - ideal)) / denom)

@@ -1,0 +1,168 @@
+"""NeuroSim-style analytical cost model (22 nm), calibrated to the paper.
+
+Three sub-models:
+
+1. **B(X) retrieval path** (Figs. 12/13): conventional per-basis programmable
+   LUT + MUX + decoder vs ASP-KAN-HAQ's SH-LUT + split decoders. The
+   conventional path is component-modeled (LUT-bit dominated); the ASP path
+   is expressed through calibrated reduction-ratio curves
+   ``ratio(G) = a + b·log2 G + c·log2² G`` fitted to ALL of the paper's
+   published aggregates simultaneously (G=8 and G=64 endpoints AND the
+   8→64 sweep averages 40.14× area / 5.74× energy) — see fit derivation in
+   the constants below. PowerGap's structural savings (decoder/MUX unit
+   counts) are exposed separately for reporting.
+
+2. **WL input generator** (Figs. 14-17): delegated to hw.input_gen.
+
+3. **Whole-accelerator scale model** (Fig. 19): power-law fits
+   ``metric = k · params^alpha`` through the paper's CF-KAN-1 (39 MB) and
+   CF-KAN-2 (63 MB) operating points; energy = power × latency reproduces
+   the published 289.6 / 645.9 nJ to <1%.
+
+All constants are documented calibrations against published numbers — this
+model reproduces the paper's *comparisons*, it is not SPICE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+from repro.core.quant import ASPConfig
+
+# ---------------------------------------------------------------------------
+# 1. B(X) retrieval path (per input channel, n = 8 bit)
+# ---------------------------------------------------------------------------
+# Conventional PTQ baseline: every basis function keeps its own programmable
+# LUT mapping the full 2^n input space (misaligned grids make sharing
+# impossible); area/energy are LUT-dominated. Units: 1 LUT bit-cell = 1.
+_LUT_BIT_AREA = 1.0
+_LUT_READ_ENERGY_EXP = 0.5   # SRAM read energy ~ sqrt(capacity)
+
+# ASP reduction-ratio curves r(G) = a + b u + c u^2, u = log2 G. Fitted so
+# r_area(8)=33.97, r_area(64)=44.24, mean_{G in 8,16,32,64} = 40.14 and
+# r_energy(8)=7.12, r_energy(64)=4.67, mean = 5.74 (paper §4.A).
+_AREA_RATIO = (5.04, 12.74, -1.035)
+_ENERGY_RATIO = (12.36, -2.21, 0.155)
+
+
+def _ratio(coeffs, g: int) -> float:
+    a, b, c = coeffs
+    u = math.log2(g)
+    return a + b * u + c * u * u
+
+
+def conventional_bx_area(cfg: ASPConfig) -> float:
+    """(K+G) dedicated programmable LUTs of 2^n entries x coeff_bits."""
+    return cfg.n_basis * (2 ** cfg.n_bits) * cfg.coeff_bits * _LUT_BIT_AREA
+
+
+def conventional_bx_energy(cfg: ASPConfig) -> float:
+    """One lookup reads each of the K+G per-basis LUTs."""
+    per_lut = ((2 ** cfg.n_bits) * cfg.coeff_bits) ** _LUT_READ_ENERGY_EXP
+    return cfg.n_basis * per_lut
+
+
+def asp_bx_area(cfg: ASPConfig) -> float:
+    return conventional_bx_area(cfg) / _ratio(_AREA_RATIO, cfg.grid_size)
+
+
+def asp_bx_energy(cfg: ASPConfig) -> float:
+    return conventional_bx_energy(cfg) / _ratio(_ENERGY_RATIO, cfg.grid_size)
+
+
+def powergap_structure(cfg: ASPConfig) -> Dict[str, float]:
+    """Structural unit counts before/after PowerGap (§3.1.B) for reporting."""
+    l = cfg.levels_per_interval
+    d = cfg.ld
+    return {
+        # direct post-alignment implementation: 8x 2L:1 TG-MUX + 8-bit decoder
+        "tg_before": (cfg.order + 5) * 2 * l,
+        "decoder_units_before": 2 ** cfg.n_bits,
+        # PowerGap: (K+1) L:1 TG-MUX + (K+1) 1:G TG-DEMUX + split decoders
+        "tg_after": (cfg.order + 1) * (l + cfg.grid_size),
+        "decoder_units_after": 2 ** (cfg.n_bits - d) + 2 ** d,
+        "sh_lut_bits": (l // 2 + l % 2) * cfg.n_taps * cfg.coeff_bits,
+        "conventional_lut_bits": cfg.n_basis * 2 ** cfg.n_bits * cfg.coeff_bits,
+    }
+
+
+# ---------------------------------------------------------------------------
+# 3. Whole-accelerator scale model (Fig. 19)
+# ---------------------------------------------------------------------------
+# Power-law fits through CF-KAN-1 (39e6 params -> 97.76 mm^2, 0.079 W,
+# 3648 ns) and CF-KAN-2 (63e6 -> 142.24 mm^2, 0.146 W, 4416 ns).
+_AREA_ALPHA = math.log(142.24 / 97.76) / math.log(63 / 39)
+_AREA_K = 97.76 / (39e6 ** _AREA_ALPHA)
+_POWER_ALPHA = math.log(0.146 / 0.079) / math.log(63 / 39)
+_POWER_K = 0.079 / (39e6 ** _POWER_ALPHA)
+_LAT_ALPHA = math.log(4416 / 3648) / math.log(63 / 39)
+_LAT_K = 3648 / (39e6 ** _LAT_ALPHA)
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorCost:
+    params: int
+    area_mm2: float
+    power_w: float
+    latency_ns: float
+
+    @property
+    def energy_nj(self) -> float:
+        return self.power_w * self.latency_ns  # W * ns = nJ
+
+
+def accelerator_cost(n_params: int) -> AcceleratorCost:
+    """Fig. 19 scale model: KAN accelerator cost at a given parameter count
+    (8-bit params, RRAM-ACIM + ASP-KAN-HAQ B(X) units + TM-DV-IG)."""
+    return AcceleratorCost(
+        params=n_params,
+        area_mm2=_AREA_K * n_params ** _AREA_ALPHA,
+        power_w=_POWER_K * n_params ** _POWER_ALPHA,
+        latency_ns=_LAT_K * n_params ** _LAT_ALPHA,
+    )
+
+
+# Prior tiny-scale work [27] (SCKAN, 28nm) — Fig. 19 comparison row.
+PRIOR_TINY = AcceleratorCost(params=78, area_mm2=0.0034225, power_w=0.001547,
+                             latency_ns=float("nan"))
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareBudget:
+    """Constraint set for the KAN-NeuroSim outer loop (§3.4 stage 1)."""
+    max_area_mm2: float = float("inf")
+    max_power_w: float = float("inf")
+    max_latency_ns: float = float("inf")
+    max_energy_nj: float = float("inf")
+
+    def satisfied_by(self, cost: AcceleratorCost) -> bool:
+        return (cost.area_mm2 <= self.max_area_mm2
+                and cost.power_w <= self.max_power_w
+                and cost.latency_ns <= self.max_latency_ns
+                and cost.energy_nj <= self.max_energy_nj)
+
+
+def kan_model_cost(n_params: int, cfg: ASPConfig, n_channels: int,
+                   mode_name: str = "TD-A") -> AcceleratorCost:
+    """Full-model cost: accelerator scale model + per-channel B(X) units +
+    input-generator mode adjustment (TD-P trades accuracy for speed)."""
+    from repro.hw import input_gen
+    base = accelerator_cost(n_params)
+    # B(X) retrieval units: normalized LUT-bit units -> mm^2 via 22nm SRAM
+    # bitcell ~0.09 um^2 incl. periphery overhead factor 2.
+    bx_area = asp_bx_area(cfg) * n_channels * 0.09e-6 * 2
+    mode = input_gen.MODES[mode_name]
+    tmdv = input_gen.input_scheme_cost("tmdv", mode.n)
+    volt = input_gen.input_scheme_cost("tmdv", TD_DEFAULT_N)
+    lat_scale = tmdv.latency / volt.latency
+    pow_scale = tmdv.power / volt.power
+    return AcceleratorCost(
+        params=n_params,
+        area_mm2=base.area_mm2 + bx_area,
+        power_w=base.power_w * pow_scale,
+        latency_ns=base.latency_ns * lat_scale,
+    )
+
+
+TD_DEFAULT_N = 3  # TD-A is the calibration reference mode

@@ -1,0 +1,100 @@
+"""Bit-sliced RRAM-ACIM MAC simulator — Pallas TPU kernel.
+
+This is the compute hot-spot of the paper's accuracy evaluation (§4.C/D):
+every KAN layer's crossbar MAC is simulated bit-slice by bit-slice with
+IR-drop row attenuation and finite-resolution ADC readout, matching the
+measured-statistics methodology the paper uses (TSMC 22nm chip error model).
+
+Physics modeled per physical array (``array_size`` rows on one bitline):
+
+  psum_k(array) = Σ_r  v[b, r] · atten[r] · bit_k(|w[r, c]|) · sign(w[r, c])
+  readout_k     = ADC(psum_k)          (uniform quantizer, adc_bits)
+  out[b, c]     = Σ_arrays Σ_k 2^k · readout_k
+
+The nonlinearity (ADC quantization at *array* granularity) is what makes
+this a kernel rather than a matmul: the row sum must complete per array
+before quantization, so the row-block size is pinned to ``array_size`` and
+the grid walks arrays as the innermost contraction dimension.
+
+KAN-SAM (paper §3.3) enters through ``row_atten``: the criticality-sorted
+row permutation places high-criticality coefficients at rows with
+atten ≈ 1.0 (nearest the clamp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _cim_mac_kernel(v_ref, w_ref, att_ref, out_ref, acc_ref, *,
+                    n_arrays: int, adc_bits: int, array_size: int,
+                    in_scale: float):
+    arr = pl.program_id(2)
+
+    @pl.when(arr == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = v_ref[...].astype(jnp.float32)                 # [bm, As]
+    att = att_ref[...].astype(jnp.float32)             # [1, As]
+    va = v * att                                       # IR-drop attenuation
+    w = w_ref[...].astype(jnp.int32)                   # [As, bc]
+    mag = jnp.abs(w)
+    sgn = jnp.sign(w).astype(jnp.float32)
+
+    fs = float(array_size) * in_scale                  # ADC full scale
+    lsb = fs / float(2 ** adc_bits - 1)
+
+    acc = acc_ref[...]
+    for k in range(8):
+        bit = ((mag >> k) & 1).astype(jnp.float32) * sgn
+        psum = jax.lax.dot(va, bit, preferred_element_type=jnp.float32)
+        psum_q = jnp.round(psum / lsb) * lsb           # per-array ADC readout
+        acc = acc + (2.0 ** k) * psum_q
+    acc_ref[...] = acc
+
+    @pl.when(arr == n_arrays - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("array_size", "adc_bits", "in_scale", "block_b",
+                     "block_c", "interpret"))
+def cim_mac(v: Array, w_codes: Array, row_atten: Array, *,
+            array_size: int, adc_bits: int = 8, in_scale: float = 1.0,
+            block_b: int = 128, block_c: int = 128,
+            interpret: bool = False) -> Array:
+    """v: [B, R] float, w_codes: [R, C] int8, row_atten: [1, R] float.
+
+    R % array_size == 0, B % block_b == 0, C % block_c == 0 (ops.py pads).
+    Returns [B, C] float32.
+    """
+    b, r = v.shape
+    c = w_codes.shape[1]
+    n_arrays = r // array_size
+    kernel = functools.partial(
+        _cim_mac_kernel, n_arrays=n_arrays, adc_bits=adc_bits,
+        array_size=array_size, in_scale=in_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b, c // block_c, n_arrays),
+        in_specs=[
+            pl.BlockSpec((block_b, array_size), lambda bb, cc, aa: (bb, aa)),
+            pl.BlockSpec((array_size, block_c), lambda bb, cc, aa: (aa, cc)),
+            pl.BlockSpec((1, array_size), lambda bb, cc, aa: (0, aa)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda bb, cc, aa: (bb, cc)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(v, w_codes, row_atten)

@@ -1,0 +1,132 @@
+"""Fused KAN spline layer Pallas TPU kernel.
+
+The paper's ACIM dataflow (B_i(x) on word lines × ci' in the crossbar) maps
+onto the MXU as ``E @ C`` where ``E`` is the expanded basis. The baseline JAX
+implementation materializes ``E`` in HBM — a (G+K)× activation blow-up that
+makes the layer memory-bound. This kernel fuses the whole chain in VMEM:
+
+    x  ──quantize──► q ──PowerGap──► (seg = q >> LD, loc = q & (L-1))
+       ──SH-LUT (one-hot MXU gather, hemi + reflection)──► K+1 taps
+       ──local→global routing (iota compare-add == the paper's DEMUX)──► E tile
+       ──MXU──► acc += E_tile @ dequant(C_tile)
+
+``E`` never leaves VMEM; coefficients are stored int8 in HBM (the paper's
+8-bit ci') and dequantized in registers, cutting weight traffic 2× vs bf16.
+
+Tiling: grid = (B/bm, O/bo, I/bi), contraction over the I axis innermost with
+an f32 VMEM accumulator; C blocks are [bi, S, bo] (S = G+K) reshaped in-VMEM
+to [bi*S, bo] so the MXU contraction dim is bi*S (pick bi so bi*S is a
+multiple of 128; e.g. S=8 → bi=16, S=67 → padding handled in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import ASPConfig
+
+Array = jax.Array
+
+
+def _kan_fused_kernel(x_ref, c_ref, scale_ref, hemi2_ref, out_ref, acc_ref, *,
+                      asp: ASPConfig, n_i_blocks: int):
+    """One (bm × bo) output tile; grid dim 2 walks the I contraction."""
+    i_blk = pl.program_id(2)
+
+    @pl.when(i_blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k1 = asp.n_taps                       # K+1
+    s = asp.n_basis                       # G+K
+    ld = asp.ld
+    lvl = asp.levels_per_interval         # L = 2^LD
+    half = hemi2_ref.shape[0]             # ceil(L/2)
+
+    x = x_ref[...].astype(jnp.float32)    # [bm, bi]
+    bm, bi = x.shape
+    n = bm * bi
+
+    # --- quantize (ASP-KAN-HAQ aligned grid) ---
+    q = jnp.floor((x - asp.x_min) / asp.step)
+    q = jnp.clip(q, 0, asp.n_levels - 1).astype(jnp.int32)
+
+    # --- PowerGap decode: global segment via shift, local via mask ---
+    seg = jax.lax.shift_right_logical(q, ld).reshape(n, 1)        # [n,1]
+    loc = jax.lax.bitwise_and(q, lvl - 1).reshape(n, 1)           # [n,1]
+
+    # --- SH-LUT lookup: one-hot MXU gather from the hemi table.
+    # hemi2 = concat(hemi, reverse(hemi, axis=1), axis=1): [half, 2*(K+1)],
+    # so reflection selects the pre-reversed tap block (no in-kernel flip).
+    refl = loc >= half
+    idx = jnp.where(refl, lvl - 1 - loc, loc)                      # [n,1]
+    iota_h = jax.lax.broadcasted_iota(jnp.int32, (n, half), 1)
+    onehot = (iota_h == idx).astype(jnp.float32)
+    taps_pair = jax.lax.dot(onehot, hemi2_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)    # [n, 2K+2]
+    taps = jnp.where(refl, taps_pair[:, k1:], taps_pair[:, :k1])   # [n, K+1]
+
+    # --- local→global routing: scatter K+1 taps into the S basis slots.
+    # t = slot - segment; slot holds tap value t when 0 <= t <= K. This is
+    # the TPU form of the paper's PowerGap DEMUX (local info -> global slot).
+    iota_s = jax.lax.broadcasted_iota(jnp.int32, (n, s), 1)
+    t_idx = iota_s - seg                                           # [n, S]
+    e = jnp.zeros((n, s), dtype=jnp.float32)
+    for tap in range(k1):
+        e = e + jnp.where(t_idx == tap, taps[:, tap:tap + 1], 0.0)
+
+    # --- MXU contraction against the (dequantized-int8) coefficient tile ---
+    em = e.reshape(bm, bi * s)
+    c = c_ref[...].astype(jnp.float32).reshape(bi * s, -1)         # [bi*S, bo]
+    acc_ref[...] += jax.lax.dot(em, c, preferred_element_type=jnp.float32)
+
+    @pl.when(i_blk == n_i_blocks - 1)
+    def _finalize():
+        out_ref[...] = (acc_ref[...] *
+                        scale_ref[...].astype(jnp.float32)
+                        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("asp", "block_b", "block_i", "block_o", "interpret",
+                     "out_dtype"))
+def kan_fused(x: Array, c_codes: Array, scale: Array, hemi: Array, *,
+              asp: ASPConfig, block_b: int = 128, block_i: int = 16,
+              block_o: int = 128, interpret: bool = False,
+              out_dtype=jnp.float32) -> Array:
+    """Fused KAN spline forward.
+
+    x: [B, I] float (bounded); c_codes: [I, S, O] int8; scale: [1, O] f32;
+    hemi: [half, K+1] f32. B % block_b == 0, I % block_i == 0,
+    O % block_o == 0 (ops.py pads). Returns [B, O] out_dtype.
+    """
+    b, i = x.shape
+    o = c_codes.shape[-1]
+    s = asp.n_basis
+    assert c_codes.shape == (i, s, o), (c_codes.shape, (i, s, o))
+    nb, ni, no = b // block_b, i // block_i, o // block_o
+    hemi2 = jnp.concatenate([hemi, hemi[:, ::-1]], axis=1)
+
+    kernel = functools.partial(_kan_fused_kernel, asp=asp, n_i_blocks=ni)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, no, ni),
+        in_specs=[
+            pl.BlockSpec((block_b, block_i), lambda bb, oo, ii: (bb, ii)),
+            pl.BlockSpec((block_i, s, block_o), lambda bb, oo, ii: (ii, 0, oo)),
+            pl.BlockSpec((1, block_o), lambda bb, oo, ii: (0, oo)),
+            pl.BlockSpec(hemi2.shape, lambda bb, oo, ii: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda bb, oo, ii: (bb, oo)),
+        out_shape=jax.ShapeDtypeStruct((b, o), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(x, c_codes, scale, hemi2)

@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel in kernels/ must match its oracle here (tests sweep shapes and
+dtypes and assert allclose in interpret mode).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, splines
+from repro.core.quant import ASPConfig
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# kan_fused oracle: quantize -> SH-LUT -> expand -> contract (+ int8 coeffs)
+# ---------------------------------------------------------------------------
+
+def kan_spline_ref(x: Array, c_codes: Array, scale: Array,
+                   asp: ASPConfig, hemi: Optional[Array] = None) -> Array:
+    """Oracle for the fused KAN spline layer.
+
+    x: [B, I] float (already bounded to the knot range)
+    c_codes: [I, G+K, O] int8 coefficient codes
+    scale: [O] float per-output-channel dequant scale
+    Returns [B, O] float32: scale * (E @ dequant(c)).
+    """
+    if hemi is None:
+        hemi = quant.hemi_for(asp)
+    basis = quant.quantized_basis(x, hemi, asp)       # [B, I, G+K]
+    e = basis.reshape(x.shape[0], -1).astype(jnp.float32)
+    c = c_codes.astype(jnp.float32).reshape(e.shape[1], -1)
+    return (e @ c) * scale[None, :]
+
+
+# ---------------------------------------------------------------------------
+# cim_mac oracle: bit-sliced ACIM MAC with IR-drop attenuation + ADC quant
+# ---------------------------------------------------------------------------
+
+def cim_mac_ref(v: Array, w_codes: Array, row_atten: Array,
+                array_size: int, adc_bits: int,
+                in_scale: float = 1.0) -> Array:
+    """Oracle for the CIM array MAC simulator.
+
+    The RRAM crossbar stores |w| bit-sliced over 8 binary columns (Alg. 1
+    Phase B); each bit-slice bitline current is the analog sum over one
+    physical array of ``array_size`` rows, attenuated per-row by IR-drop
+    (``row_atten``), then digitized by a finite-resolution ADC before the
+    digital shift-and-add recombination. Signs use the differential-pair
+    convention (positive and negative arrays subtracted digitally).
+
+    v: [B, R] float word-line inputs (basis values, already DAC-quantized)
+    w_codes: [R, C] int8 weights
+    row_atten: [R] float in (0, 1] — per-row IR-drop attenuation, *after*
+       any KAN-SAM permutation (position-dependent, nearest-clamp rows ~1.0)
+    array_size: physical rows per array (BL sum boundary for the ADC)
+    adc_bits: ADC resolution per bit-slice readout
+    Returns [B, C] float32.
+    """
+    b, r = v.shape
+    c = w_codes.shape[1]
+    n_arrays = (r + array_size - 1) // array_size
+    pad = n_arrays * array_size - r
+    vf = jnp.pad(v.astype(jnp.float32), ((0, 0), (0, pad)))
+    wf = jnp.pad(w_codes.astype(jnp.int32), ((0, pad), (0, 0)))
+    att = jnp.pad(row_atten.astype(jnp.float32), (0, pad))
+
+    mag = jnp.abs(wf)
+    sgn = jnp.sign(wf).astype(jnp.float32)
+    va = (vf * att[None, :]).reshape(b, n_arrays, array_size)
+
+    # ADC full-scale per bit-slice: worst-case bitline sum for binary cells.
+    fs = float(array_size) * in_scale
+    lsb = fs / (2 ** adc_bits - 1)
+
+    out = jnp.zeros((b, c), dtype=jnp.float32)
+    for k in range(8):
+        bit = ((mag >> k) & 1).astype(jnp.float32) * sgn  # signed slice
+        ws = bit.reshape(n_arrays, array_size, c)
+        psum = jnp.einsum("bas,asc->bac", va, ws)         # per-array sums
+        psum_q = jnp.round(psum / lsb) * lsb              # ADC quantization
+        out = out + (2.0 ** k) * psum_q.sum(axis=1)
+    return out
+
+
+def cim_mac_ideal(v: Array, w_codes: Array) -> Array:
+    """Noise-free digital MAC for degradation comparisons."""
+    return v.astype(jnp.float32) @ w_codes.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssd oracle: Mamba-2 state-space-duality, naive sequential recurrence
+# ---------------------------------------------------------------------------
+
+def ssd_ref(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+            d_skip: Optional[Array] = None,
+            init_state: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Sequential-scan oracle for the chunked SSD kernel.
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t ⊗ B_t ;  y_t = h_t @ C_t
+
+    x:     [B, T, H, P]   (batch, time, heads, head_dim)
+    dt:    [B, T, H]      (positive step sizes, post-softplus)
+    a:     [H]            (negative scalars, -exp(A_log))
+    b_mat: [B, T, N]      (shared across heads: n_groups=1)
+    c_mat: [B, T, N]
+    d_skip:[H] optional   (skip connection y += D * x)
+    init_state: [B, H, P, N] optional
+    Returns (y [B, T, H, P], final_state [B, H, P, N]).
+    """
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp          # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * a[None, :])                    # [B,H]
+        upd = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        state = decay[..., None, None] * state + upd         # [B,H,P,N]
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32))
+    final, ys = jax.lax.scan(step, init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # [B, T, H, P]
+    if d_skip is not None:
+        y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)
+    return y, final

@@ -1,0 +1,108 @@
+"""Chunked Mamba-2 SSD Pallas TPU kernel.
+
+One program per (batch, head): the chunk loop runs inside the kernel with
+the recurrent state held in a VMEM scratch accumulator [P, N] — the
+inter-chunk dependency never leaves VMEM, while the intra-chunk quadratic
+term uses the MXU ([cl, cl] score and decay matrices per chunk).
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t x_t ⊗ B_t ;   y_t = C_t · h_t + D x_t
+
+All decay exponents are ≤ 0 (a < 0, dt > 0): every exp() is safe.
+Oracle: kernels/ref.ssd_ref (sequential scan); also cross-checked against
+models/ssd.ssd_chunked (pure-JAX chunked form used by the LM stack).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref,
+                *, chunk: int, n_chunks: int):
+    """Blocks: x [1,1,T,P]; dt [1,1,T,1]; a [1,1]; b/c [1,T,N]; d [1,1];
+    y [1,1,T,P]; scratch state [P, N] f32."""
+    state_ref[...] = jnp.zeros_like(state_ref)
+    a = a_ref[0, 0]
+    d_skip = d_ref[0, 0]
+    cl = chunk
+
+    def body(ci, _):
+        t0 = ci * cl
+        xc = x_ref[0, 0, pl.ds(t0, cl), :].astype(jnp.float32)   # [cl, P]
+        dtc = dt_ref[0, 0, pl.ds(t0, cl), :].astype(jnp.float32)  # [cl, 1]
+        bc = b_ref[0, pl.ds(t0, cl), :].astype(jnp.float32)       # [cl, N]
+        cc = c_ref[0, pl.ds(t0, cl), :].astype(jnp.float32)       # [cl, N]
+
+        da = dtc * a                                          # [cl, 1] <= 0
+        cs = jnp.cumsum(da, axis=0)                           # [cl, 1]
+        seg_end = cs[cl - 1, 0]
+        xdt = xc * dtc                                        # [cl, P]
+
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+        diff = cs - cs.reshape(1, cl)                         # [cl, cl]
+        iota_i = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+        iota_j = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+        l_mat = jnp.where(iota_i >= iota_j, jnp.exp(diff), 0.0)
+        scores = jax.lax.dot(cc, bc.T,
+                             preferred_element_type=jnp.float32)  # [cl, cl]
+        y_diag = jax.lax.dot(scores * l_mat, xdt,
+                             preferred_element_type=jnp.float32)  # [cl, P]
+
+        # carry-in readout: y_off = (C @ state^T) * exp(cs)
+        st = state_ref[...]                                   # [P, N]
+        y_off = jax.lax.dot(cc, st.T,
+                            preferred_element_type=jnp.float32) * jnp.exp(cs)
+
+        # state update: S = exp(seg_end) S + sum_j exp(seg_end - cs_j) xdt_j B_j
+        decay_out = jnp.exp(seg_end - cs)                     # [cl, 1]
+        upd = jax.lax.dot((xdt * decay_out).T, bc,
+                          preferred_element_type=jnp.float32)  # [P, N]
+        state_ref[...] = jnp.exp(seg_end) * st + upd
+
+        y_ref[0, 0, pl.ds(t0, cl), :] = (y_diag + y_off + d_skip * xc
+                                         ).astype(y_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, n_chunks, body, ())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret", "out_dtype"))
+def ssd_scan(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+             d_skip: Array, *, chunk: int = 64, interpret: bool = False,
+             out_dtype=jnp.float32) -> Array:
+    """x: [B, T, H, P]; dt: [B, T, H]; a/d_skip: [H]; b/c: [B, T, N].
+    T % chunk == 0 (ops wrapper pads). Returns y [B, T, H, P]."""
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    n_chunks = t // chunk
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    a2 = a.reshape(h, 1).astype(jnp.float32)
+    d2 = d_skip.reshape(h, 1).astype(jnp.float32)
+    dt3 = jnp.moveaxis(dt, -1, 1)[..., None]     # [B, H, T, 1]
+    x3 = jnp.moveaxis(x, 2, 1)                   # [B, H, T, P]
+    y = pl.pallas_call(
+        kernel,
+        grid=(bsz, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, t, p), lambda b, hh: (b, hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1), lambda b, hh: (b, hh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, hh: (hh, 0)),
+            pl.BlockSpec((1, t, n), lambda b, hh: (b, 0, 0)),
+            pl.BlockSpec((1, t, n), lambda b, hh: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, hh: (hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, t, p), lambda b, hh: (b, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, t, p), out_dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+    )(x3, dt3, a2, b_mat, c_mat, d2)
+    return jnp.moveaxis(y, 1, 2)                 # [B, T, H, P]

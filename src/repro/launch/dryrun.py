@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This proves the distribution config is coherent without hardware: 512 host
+placeholder devices stand in for 2 pods × 256 v5e chips. For each cell we
+  1. build ShapeDtypeStruct stand-ins for params/opt-state/batch/caches
+     (jax.eval_shape — nothing is allocated),
+  2. jit with NamedShardings from the logical rules (dist/sharding.py),
+  3. ``.lower().compile()`` — sharding mismatches, non-divisible dims and
+     unsupported collectives fail HERE,
+  4. record memory_analysis() + cost_analysis() + the collective-bytes
+     breakdown parsed from the optimized HLO (for §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfglib
+from repro.configs import ArchConfig, SHAPES, ShapeSpec, get_arch
+from repro.dist import sharding as shlib
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tfm
+from repro.optim import make_optimizer, warmup_cosine
+from repro.serve import decode as serve_dec
+from repro.train.train_step import TrainConfig, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def batch_structs(arch: ArchConfig, shape: ShapeSpec, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    m = arch.model
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def sds(shp, dt, names):
+        return jax.ShapeDtypeStruct(
+            shp, dt, sharding=shlib.named_sharding(mesh, shp, names))
+
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), i32, ("batch", "seq")),
+                 "labels": sds((b, s), i32, ("batch", "seq"))}
+        if m.frontend == "audio_stub":
+            batch["frames"] = sds((b, s, m.d_model), m.dtype,
+                                  ("batch", "seq", None))
+        if m.frontend == "vision_stub":
+            batch["vision_embeds"] = sds((b, m.n_vision_patches, m.d_model),
+                                         m.dtype, ("batch", "seq", None))
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), i32, ("batch", "seq"))}
+        if m.frontend == "audio_stub":
+            batch["frames"] = sds((b, s, m.d_model), m.dtype,
+                                  ("batch", "seq", None))
+        if m.frontend == "vision_stub":
+            batch["vision_embeds"] = sds((b, m.n_vision_patches, m.d_model),
+                                         m.dtype, ("batch", "seq", None))
+        return batch
+    # decode: one token + cache of seq_len
+    return {"tokens": sds((b, 1), i32, ("batch", None)),
+            "index": jax.ShapeDtypeStruct((), i32)}
+
+
+def _tree_structs_with_sharding(mesh, struct_tree, spec_tree):
+    shardings = shlib.tree_shardings(mesh, struct_tree, spec_tree)
+    return jax.tree.map(
+        lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+        struct_tree, shardings)
+
+
+def _replicated_structs(mesh, struct_tree):
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=rep),
+        struct_tree)
+
+
+def build_cell(arch: ArchConfig, shape: ShapeSpec, mesh):
+    """Returns (fn, example_args) ready for jit().lower(*args)."""
+    m = arch.model
+    if m.family == "cfkan":
+        return _build_cfkan_cell(m.name, shape, mesh)
+    n_model = dict(mesh.shape).get("model", 1)
+
+    params_struct = jax.eval_shape(
+        lambda k: tfm.init_model(k, m, n_model=n_model),
+        jax.random.PRNGKey(0))
+    pspec = tfm.param_spec(m)
+    params_in = _tree_structs_with_sharding(mesh, params_struct, pspec)
+
+    if shape.kind == "train":
+        opt = make_optimizer(arch.optimizer,
+                             warmup_cosine(arch.learning_rate, 100, 10000))
+        # each microbatch must still divide the data-parallel shards, so the
+        # accumulation factor is clamped per mesh (e.g. accum 16 on the
+        # 16-way single pod becomes 8 on the 32-way 2-pod mesh).
+        dp = 1
+        for ax in ("pod", "data"):
+            dp *= dict(mesh.shape).get(ax, 1)
+        accum = max(1, min(arch.accum_steps, shape.global_batch // dp))
+        tcfg = TrainConfig(accum_steps=accum, grad_dtype=arch.grad_dtype)
+        step_fn = make_train_step(m, opt, tcfg)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+
+        def opt_shard(path_leaf):
+            return path_leaf
+        # moments share the param tree structure -> same shardings; factored
+        # or scalar leaves are replicated.
+        def opt_in_tree(struct, params_like):
+            out = {}
+            for k, v in struct.items():
+                if k in ("m", "v"):
+                    out[k] = _tree_structs_with_sharding(mesh, v, pspec)
+                else:
+                    out[k] = _replicated_structs(mesh, v)
+            return out
+        opt_in = opt_in_tree(opt_struct, params_in)
+        batch = batch_structs(arch, shape, mesh)
+        return step_fn, (params_in, opt_in, batch)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return serve_dec.prefill(params, m, batch, max_len=shape.seq_len,
+                                     last_only=True)
+        return prefill_fn, (params_in, batch_structs(arch, shape, mesh))
+
+    # decode
+    enc_len = shape.seq_len if m.family == "encdec" else 0
+    cache_struct = jax.eval_shape(
+        lambda: serve_dec.init_cache(m, shape.global_batch, shape.seq_len,
+                                     enc_len))
+    cache_in = _tree_structs_with_sharding(mesh, cache_struct,
+                                           serve_dec.cache_spec(m))
+    batch = batch_structs(arch, shape, mesh)
+
+    def decode_fn(params, cache, tokens, index):
+        return serve_dec.decode_step(params, cache, tokens, index, m)
+    return decode_fn, (params_in, cache_in, batch["tokens"], batch["index"])
+
+
+def _build_cfkan_cell(name: str, shape: ShapeSpec, mesh):
+    """The paper's own architecture at full scale (39M/63M 8-bit params):
+    CF-KAN QAT train step sharded batch x model over the production mesh."""
+    import importlib
+    from repro.models import cf_kan
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_"))
+    mcfg = mod.MODEL
+    params_struct = jax.eval_shape(
+        lambda k: cf_kan.init(k, mcfg), jax.random.PRNGKey(0))
+    pspec = {
+        "enc": {"coeffs": ("none", "none", "mlp"), "w_base": ("none", "mlp")},
+        "dec": {"coeffs": ("mlp", "none", "embed"),
+                "w_base": ("mlp", "embed")},
+    }
+    params_in = _tree_structs_with_sharding(mesh, params_struct, pspec)
+    b = max(shape.global_batch, 256)
+    x_in = jax.ShapeDtypeStruct(
+        (b, mcfg.n_items), jnp.float32,
+        sharding=shlib.named_sharding(mesh, (b, mcfg.n_items),
+                                      ("batch", None)))
+
+    def train_step(params, x):
+        loss, grads = jax.value_and_grad(
+            lambda p: cf_kan.multinomial_loss(p, x, mcfg, qat=True))(params)
+        params = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+        return params, loss
+
+    return train_step, (params_in, x_in)
+
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+SHAPE_RE = re.compile(r"\b((?:[a-z]+[0-9]+|pred)\[[0-9,]*\])")
+
+DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+               "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+               "f64": 8, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(tok: str) -> int:
+    dt, dims = tok.split("[")
+    dims = dims.rstrip("]")
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum OPERAND bytes of every collective op in optimized HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        # operands are the shape tokens inside the op's argument list
+        rhs = line.split("=", 1)[1]
+        paren = rhs.find("(")
+        if paren < 0:
+            continue
+        args = rhs[paren + 1:]
+        toks = SHAPE_RE.findall(args)
+        nbytes = sum(_shape_bytes(t) for t in toks)
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             save: bool = True) -> Dict[str, Any]:
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    n_dev = int(np.prod(list(dict(mesh.shape).values())))
+    rec: Dict[str, Any] = {"arch": arch_name, "shape": shape_name,
+                           "mesh": mesh_tag, "devices": n_dev}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = build_cell(arch, shape, mesh)
+            donate = (0, 1) if shape.kind == "train" else ()
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops": float(cost.get("flops", -1)) if cost else -1,
+            "bytes_accessed": float(cost.get("bytes accessed", -1))
+            if cost else -1,
+            "collective_bytes": coll,
+            "memory": _mem_dict(mem),
+            "hlo_bytes": len(hlo),
+        })
+    except Exception as e:
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-3000:]})
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(
+            RESULTS_DIR, f"{arch_name}__{shape_name}__{mesh_tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s) for a, s, ok in cfglib.lm_cells() if ok]
+    else:
+        cells = [(args.arch, args.shape)]
+    for a, s in cells:
+        rec = run_cell(a, s, args.multi_pod)
+        status = "OK" if rec.get("ok") else f"FAIL {rec.get('error')}"
+        mem = rec.get("memory", {})
+        per_dev = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / rec["devices"] / 2**30
+        print(f"[{rec['mesh']}] {a} x {s}: {status} "
+              f"compile={rec.get('compile_s', 0)}s "
+              f"flops={rec.get('flops', 0):.3g} "
+              f"perdev~{per_dev:.2f}GiB "
+              f"coll={rec.get('collective_bytes', {})}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Attention: GQA/MQA/MHA with memory-efficient chunked softmax.
+
+Three execution paths, all pure JAX (compilable on any backend — required by
+the multi-pod dry-run, which lowers on host devices):
+
+* ``chunked_attention`` — full (causal or bidirectional) attention with an
+  online-softmax scan over KV chunks: peak memory O(S * ckv) instead of
+  O(S^2), the standard XLA-level flash-attention substitute.
+* ``windowed_attention`` — sliding-window (Mistral/Mixtral SWA, Griffin local
+  attention) via the banded two-chunk trick: with the window W as chunk size,
+  a query in chunk i only needs key chunks i-1 and i. O(S*W) compute and
+  memory, fully parallel over chunks (no scan).
+* ``decode_attention`` — single-token query against a (possibly rolling) KV
+  cache.
+
+GQA is expressed by grouping query heads [B, S, Kv, G, hd]; KV heads shard
+over 'model' when divisible, otherwise head_dim shards (see dist.sharding).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _split_heads(q: Array, n_kv: int) -> Array:
+    """[B, S, Hq, hd] -> [B, S, Kv, G, hd]."""
+    b, s, hq, hd = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      q_offset=0, kv_valid_len: Optional[Array] = None,
+                      kv_chunk: int = 512) -> Array:
+    """Online-softmax attention, scanning KV chunks.
+
+    q: [B, S, Hq, hd]; k, v: [B, T, Kv, hd]; q position i = q_offset + i.
+    kv_valid_len: optional scalar — keys at positions >= valid_len are masked.
+    Returns [B, S, Hq, hd].
+    """
+    b, s, hq, hd = q.shape
+    t = k.shape[1]
+    n_kv = k.shape[2]
+    kv_chunk = min(kv_chunk, t)
+    pad = (-t) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nkc = (t + pad) // kv_chunk
+
+    qg = _split_heads(q, n_kv).astype(jnp.float32) * (hd ** -0.5)
+    q_pos = q_offset + jnp.arange(s)
+    kc = jnp.moveaxis(k.reshape(b, nkc, kv_chunk, n_kv, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nkc, kv_chunk, n_kv, hd), 1, 0)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kb, vb = inp
+        k_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        scores = jnp.einsum("bskgd,btkd->bskgt", qg, kb.astype(jnp.float32))
+        mask = jnp.ones((s, kv_chunk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        mask &= (k_pos < t)[None, :]
+        if kv_valid_len is not None:
+            mask &= (k_pos < kv_valid_len)[None, :]
+        scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = (acc * corr[..., None]
+                   + jnp.einsum("bskgt,btkd->bskgd", p,
+                                vb.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, n_kv, hq // n_kv), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros_like(m0)
+    a0 = jnp.zeros((b, s, n_kv, hq // n_kv, hd), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nkc), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def windowed_attention(q: Array, k: Array, v: Array, *, window: int,
+                       q_offset=0) -> Array:
+    """Banded causal attention: position i attends to (i-window, i].
+
+    Pads S to a multiple of ``window``; each query chunk attends to its own
+    and the previous key chunk — O(S*W), parallel over chunks.
+    """
+    b, s, hq, hd = q.shape
+    n_kv = k.shape[2]
+    w = window
+    pad = (-s) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // w
+
+    qg = _split_heads(q, n_kv).astype(jnp.float32) * (hd ** -0.5)
+    qg = qg.reshape(b, nc, w, n_kv, hq // n_kv, hd)
+
+    def chunks(x):                                    # [B, Sp, Kv, hd]
+        xc = x.reshape(b, nc, w, n_kv, hd)
+        prev = jnp.pad(xc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+        return jnp.concatenate([prev, xc], axis=2)    # [B, nc, 2w, Kv, hd]
+
+    kc, vc = chunks(k.astype(jnp.float32)), chunks(v.astype(jnp.float32))
+    scores = jnp.einsum("bcqkgd,bctkd->bcqkgt", qg, kc)
+
+    q_idx = jnp.arange(w)[:, None]                    # position within chunk
+    t_idx = jnp.arange(2 * w)[None, :] - w            # relative to chunk start
+    rel = q_idx - t_idx                               # q_pos - k_pos
+    mask = (rel >= 0) & (rel < w)                     # causal, banded
+    c_idx = jnp.arange(nc)
+    valid_abs = (c_idx[:, None, None] * w + t_idx[None]) >= 0
+    full_mask = mask[None] & valid_abs                # [nc, w, 2w]
+    scores = jnp.where(full_mask[None, :, :, None, None, :], scores, NEG_INF)
+
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bcqkgt,bctkd->bcqkgd", p, vc)
+    out = out.reshape(b, sp, hq, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_index: Array, *, rolling: bool = False) -> Array:
+    """One-token decode. q: [B, 1, Hq, hd]; caches: [B, T, Kv, hd].
+
+    ``cache_index`` = number of valid tokens already in the cache INCLUDING
+    the current one. For rolling (windowed) caches, every slot < min(index, T)
+    is valid — softmax is permutation-invariant over KV so slot order does
+    not matter.
+    """
+    b, _, hq, hd = q.shape
+    t, n_kv = k_cache.shape[1], k_cache.shape[2]
+    qg = _split_heads(q, n_kv).astype(jnp.float32) * (hd ** -0.5)
+    scores = jnp.einsum("bskgd,btkd->bskgt", qg,
+                        k_cache.astype(jnp.float32))
+    pos = jnp.arange(t)
+    limit = jnp.minimum(cache_index, t) if rolling else cache_index
+    mask = pos < limit                                 # [T], scalar index
+    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bskgt,btkd->bskgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+def cache_update(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
+                 index: Array, *, rolling: bool = False
+                 ) -> Tuple[Array, Array]:
+    """Insert one token's K/V at ``index`` (mod T for rolling caches)."""
+    t = k_cache.shape[1]
+    slot = jnp.mod(index, t) if rolling else index
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    return k_cache, v_cache

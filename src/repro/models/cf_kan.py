@@ -1,0 +1,164 @@
+"""CF-KAN: KAN-based collaborative-filtering autoencoder (paper §4, ref [23]).
+
+The paper's large-scale evaluation vehicle: an encoder–decoder network whose
+layers are KAN layers, trained on user→item interaction vectors with a
+multinomial (softmax) likelihood (Mult-VAE style), evaluated by Recall@k /
+NDCG@k. Two operating points (Fig. 19):
+
+  CF-KAN-1 — "high performance": Algorithm-2 sensitivity-tiered grids,
+             TD-P input mode in non-sensitive regions.
+  CF-KAN-2 — "high accuracy": uniform G_high, TD-A everywhere.
+
+The same apply() runs in three fidelities: float reference, ASP-quantized
+(baseline/fused), and CIM-simulated (hw.cim error model + KAN-SAM mapping) —
+accuracy degradation is measured between the first and the last.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kan_layer, kan_sam, quant
+from repro.core.kan_layer import KANLayerConfig
+from repro.core.quant import ASPConfig
+from repro.hw import cim
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CFKANConfig:
+    n_items: int
+    hidden: int
+    asp_enc: ASPConfig
+    asp_dec: ASPConfig
+    impl: str = "baseline"
+    name: str = "cf-kan"
+
+    def layer_cfgs(self):
+        enc = KANLayerConfig(self.n_items, self.hidden, self.asp_enc,
+                             impl=self.impl)
+        dec = KANLayerConfig(self.hidden, self.n_items, self.asp_dec,
+                             impl=self.impl)
+        return enc, dec
+
+    @property
+    def n_params(self) -> int:
+        enc, dec = self.layer_cfgs()
+        return (kan_layer.kan_layer_param_count(enc)
+                + kan_layer.kan_layer_param_count(dec))
+
+    def with_grids(self, g_enc: int, g_dec: int) -> "CFKANConfig":
+        return dataclasses.replace(self, asp_enc=self.asp_enc.with_grid(g_enc),
+                                   asp_dec=self.asp_dec.with_grid(g_dec))
+
+
+def init(key: Array, cfg: CFKANConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    enc, dec = cfg.layer_cfgs()
+    return {"enc": kan_layer.init_kan_layer(k1, enc),
+            "dec": kan_layer.init_kan_layer(k2, dec)}
+
+
+def apply(params: Dict, x: Array, cfg: CFKANConfig, *, qat: bool = False) -> Array:
+    """x: [B, n_items] normalized interaction vector -> item logits."""
+    enc, dec = cfg.layer_cfgs()
+    z = kan_layer.apply_kan_layer(params["enc"], x, enc, qat=qat)
+    return kan_layer.apply_kan_layer(params["dec"], z, dec, qat=qat)
+
+
+def apply_cim(params: Dict, x: Array, cfg: CFKANConfig, cim_cfg: cim.CIMConfig,
+              *, use_sam: bool = False,
+              stats: Optional[Dict[str, kan_sam.BasisStats]] = None,
+              rng: Optional[Array] = None) -> Array:
+    """CIM-simulated forward: each KAN layer's spline MAC runs through the
+    bit-sliced crossbar simulator; KAN-SAM optionally remaps rows."""
+    enc_cfg, dec_cfg = cfg.layer_cfgs()
+    h = _cim_layer(params["enc"], x, enc_cfg, cim_cfg, use_sam,
+                   stats["enc"] if stats else None,
+                   _fold(rng, 0))
+    return _cim_layer(params["dec"], h, dec_cfg, cim_cfg, use_sam,
+                      stats["dec"] if stats else None,
+                      _fold(rng, 1))
+
+
+def _fold(rng, i):
+    return None if rng is None else jax.random.fold_in(rng, i)
+
+
+def _cim_layer(lp: Dict, x: Array, lcfg: KANLayerConfig,
+               cim_cfg: cim.CIMConfig, use_sam: bool,
+               stats: Optional[kan_sam.BasisStats],
+               rng: Optional[Array]) -> Array:
+    asp = lcfg.asp
+    xb = kan_layer._bound(x, lcfg)
+    hemi = quant.hemi_for(asp)
+    basis = quant.quantized_basis(xb, hemi, asp)          # [B, I, S] (WL values)
+    codes, scale = quant.quantize_coeffs(lp["coeffs"], asp, axis=(0, 1))
+
+    r = lcfg.in_dim * asp.n_basis
+    w = codes.reshape(r, lcfg.out_dim)
+    atten = None
+    if use_sam:
+        if stats is None:
+            raise ValueError("KAN-SAM needs Phase-A stats")
+        c_w = kan_sam.criticality(stats, codes)
+        pos_att = cim.row_attenuation(r, cim_cfg)
+        atten = kan_sam.sam_attenuation(c_w, pos_att).reshape(-1)
+    y = cim.cim_forward(basis.reshape(x.shape[0], r), w, cim_cfg,
+                        atten_of_logical=atten, rng=rng)
+    y = y * scale.reshape(1, -1)
+    base = kan_layer._base_branch(xb, lp, lcfg)
+    return y + base
+
+
+def collect_layer_stats(params: Dict, batches, cfg: CFKANConfig
+                        ) -> Dict[str, kan_sam.BasisStats]:
+    """Phase A of Algorithm 1 for both layers (encoder inputs are data;
+    decoder inputs are encoder outputs)."""
+    enc_cfg, dec_cfg = cfg.layer_cfgs()
+    s_enc = kan_sam.init_stats(enc_cfg.in_dim, enc_cfg.asp)
+    s_dec = kan_sam.init_stats(dec_cfg.in_dim, dec_cfg.asp)
+    for x in batches:
+        xb = kan_layer._bound(x, enc_cfg)
+        s_enc = kan_sam.update_stats(s_enc, xb, enc_cfg.asp)
+        h = kan_layer.apply_kan_layer(params["enc"], x, enc_cfg)
+        hb = kan_layer._bound(h, dec_cfg)
+        s_dec = kan_sam.update_stats(s_dec, hb, dec_cfg.asp)
+    return {"enc": s_enc, "dec": s_dec}
+
+
+# --- loss & metrics ---------------------------------------------------------
+
+def multinomial_loss(params: Dict, x: Array, cfg: CFKANConfig,
+                     qat: bool = False) -> Array:
+    """Mult-VAE style: -sum softmax-log-likelihood of observed interactions."""
+    logits = apply(params, x, cfg, qat=qat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(logp * x, axis=-1))
+
+
+def recall_at_k(scores: Array, held_out: Array, observed: Array,
+                k: int = 20) -> Array:
+    """Recall@k: fraction of held-out items in the top-k unobserved scores."""
+    scores = jnp.where(observed > 0, -jnp.inf, scores)
+    topk = jax.lax.top_k(scores, k)[1]                       # [B, k]
+    hits = jnp.take_along_axis(held_out, topk, axis=-1).sum(-1)
+    denom = jnp.minimum(held_out.sum(-1), k)
+    return jnp.mean(jnp.where(denom > 0, hits / jnp.maximum(denom, 1), 0.0))
+
+
+def ndcg_at_k(scores: Array, held_out: Array, observed: Array,
+              k: int = 20) -> Array:
+    scores = jnp.where(observed > 0, -jnp.inf, scores)
+    topk = jax.lax.top_k(scores, k)[1]
+    gains = jnp.take_along_axis(held_out, topk, axis=-1)
+    discounts = 1.0 / jnp.log2(jnp.arange(2, k + 2, dtype=jnp.float32))
+    dcg = (gains * discounts).sum(-1)
+    n_rel = jnp.minimum(held_out.sum(-1), k).astype(jnp.int32)
+    ideal = jnp.cumsum(discounts)
+    idcg = jnp.where(n_rel > 0, ideal[jnp.maximum(n_rel - 1, 0)], 1.0)
+    return jnp.mean(jnp.where(n_rel > 0, dcg / idcg, 0.0))

@@ -1,0 +1,117 @@
+"""Shared neural-net building blocks (functional, pytree params)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+Array = jax.Array
+
+
+# --- norms -------------------------------------------------------------------
+
+def init_rmsnorm(d: int) -> Dict[str, Array]:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rmsnorm(params: Dict[str, Array], x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Dict[str, Array]:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32),
+            "bias": jnp.zeros((d,), dtype=jnp.float32)}
+
+
+def layernorm(params: Dict[str, Array], x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+NORM_INIT = {"rmsnorm": init_rmsnorm, "layernorm": init_layernorm}
+NORM_APPLY = {"rmsnorm": rmsnorm, "layernorm": layernorm}
+
+
+def norm_spec(kind: str):
+    return ({"scale": ("none",)} if kind == "rmsnorm"
+            else {"scale": ("none",), "bias": ("none",)})
+
+
+# --- dense -------------------------------------------------------------------
+
+def dense_init(key: Array, d_in: int, d_out, dtype=jnp.float32,
+               scale: Optional[float] = None) -> Array:
+    shape = (d_in,) + (d_out if isinstance(d_out, tuple) else (d_out,))
+    fan_in = d_in
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * std).astype(dtype)
+
+
+# --- activations -------------------------------------------------------------
+
+def squared_relu(x: Array) -> Array:
+    r = jax.nn.relu(x)
+    return r * r
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": squared_relu,
+}
+
+
+# --- rotary position embedding -----------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> Array:
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: [B, S, H, hd]; positions: [B, S] or [S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # [hd/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int, max_scale: float = 10000.0) -> Array:
+    """Whisper-style fixed sinusoidal embeddings [seq, d]."""
+    half = d // 2
+    freq = jnp.exp(-math.log(max_scale) * jnp.arange(half) / (half - 1))
+    args = jnp.arange(seq)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(args), jnp.cos(args)], axis=-1)
+
+
+# --- embedding ---------------------------------------------------------------
+
+def init_embedding(key: Array, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32)
+            * (1.0 / math.sqrt(d))).astype(dtype)
+
+
+def embed_lookup(table: Array, ids: Array) -> Array:
+    out = jnp.take(table, ids, axis=0)
+    return shard(out, "batch", "seq", None)
+
+
+def unembed(x: Array, table: Array) -> Array:
+    """Tied output projection; logits sharded over vocab via the table."""
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return shard(logits, "batch", "seq", "vocab")

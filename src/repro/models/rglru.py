@@ -1,0 +1,127 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Train/prefill uses an associative scan over T (O(log T) depth — this is the
+sub-quadratic temporal mixer that makes recurrentgemma a `long_500k` arch);
+decode is a single fused step carrying h.
+
+The full Griffin recurrent block is: parallel linear branches (gate: GeLU;
+main: causal conv1d(4) → RG-LRU), merged by product, then output projection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+Array = jax.Array
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int              # lru width
+    conv_width: int = 4
+    dtype: object = jnp.float32
+
+
+def init_rglru_block(key: Array, cfg: RGLRUConfig) -> Dict[str, Array]:
+    ks = jax.random.split(key, 6)
+    d, dr = cfg.d_model, cfg.d_rnn
+    # Lambda init so that a^c spans ~U(0.9, 0.999) (Griffin appendix)
+    u = jax.random.uniform(ks[0], (dr,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))   # softplus^{-1}(-log u / c)
+    return {
+        "w_main": layers.dense_init(ks[1], d, dr, dtype=cfg.dtype),
+        "w_gate": layers.dense_init(ks[2], d, dr, dtype=cfg.dtype),
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, dr),
+                                   dtype=jnp.float32) * 0.2).astype(cfg.dtype),
+        "w_a": layers.dense_init(ks[4], dr, dr, dtype=cfg.dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": layers.dense_init(ks[5], dr, dr, dtype=cfg.dtype),
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lambda": lam.astype(jnp.float32),
+        "w_out": layers.dense_init(jax.random.fold_in(key, 7), dr, d,
+                                   dtype=cfg.dtype),
+    }
+
+
+def rglru_block_spec(cfg: RGLRUConfig) -> Dict:
+    return {"w_main": ("embed", "state"), "w_gate": ("embed", "state"),
+            "conv": ("none", "state"), "w_a": ("none", "state"),
+            "b_a": ("none",), "w_x": ("none", "state"), "b_x": ("none",),
+            "lambda": ("none",), "w_out": ("state", "embed")}
+
+
+def _gates(params, u: Array):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(uf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, gated
+
+
+def rglru_scan(params, u: Array) -> Array:
+    """u: [B, T, dr] -> h: [B, T, dr] via associative scan over T."""
+    a, b = _gates(params, u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_out, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_out
+    return h
+
+
+def rglru_step(params, u_t: Array, h_prev: Array) -> Tuple[Array, Array]:
+    """u_t: [B, dr]; h_prev: [B, dr] -> (h_t, h_t)."""
+    a, b = _gates(params, u_t)
+    h = a * h_prev + b
+    return h, h
+
+
+def apply_rglru_block(params: Dict[str, Array], x: Array,
+                      cfg: RGLRUConfig) -> Array:
+    """Train/prefill. x: [B,T,D] -> [B,T,D]."""
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    main = x @ params["w_main"]
+    from repro.models.ssd import _causal_conv
+    main = _causal_conv(main, params["conv"])
+    h = rglru_scan(params, main).astype(x.dtype)
+    return (h * gate) @ params["w_out"]
+
+
+def init_rglru_cache(batch: int, cfg: RGLRUConfig, dtype=jnp.float32) -> Dict:
+    return {"h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+            "conv_buf": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn),
+                                  dtype)}
+
+
+def apply_rglru_block_decode(params: Dict[str, Array], x: Array, cache: Dict,
+                             cfg: RGLRUConfig) -> Tuple[Array, Dict]:
+    """One-token decode. x: [B,1,D]."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ params["w_gate"])
+    main = xt @ params["w_main"]                           # [B, dr]
+    hist = jnp.concatenate(
+        [cache["conv_buf"], main[:, None, :].astype(cache["conv_buf"].dtype)],
+        axis=1)
+    w = params["conv"]
+    main = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+    h, _ = rglru_step(params, main, cache["h"])
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return y[:, None, :], {"h": h, "conv_buf": hist[:, 1:]}

@@ -1,0 +1,237 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel form.
+
+y_t = C_t · h_t ,  h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t   (per head)
+
+The chunked algorithm (Dao & Gu 2024) splits T into chunks of length ``cl``:
+an intra-chunk quadratic (attention-like) term plus an inter-chunk linear
+recurrence over per-chunk states — O(T·cl + T·N·P) compute, constant decode
+state. All decay exponents are ≤ 0 (A < 0, dt > 0) so every exp() here is
+numerically safe.
+
+The oracle (kernels/ref.ssd_ref) is the naive sequential recurrence; tests
+assert allclose between the two across shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers
+
+Array = jax.Array
+
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b_mat: Array, c_mat: Array,
+                d_skip: Optional[Array] = None, *, chunk: int = 64,
+                init_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """x: [B,T,H,P]; dt: [B,T,H] (>0); a: [H] (<0); b_mat/c_mat: [B,T,N].
+
+    Returns (y [B,T,H,P], final_state [B,H,P,N]).
+    """
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nc, cl = tp // chunk, chunk
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, cl, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, cl, h)
+    bf = b_mat.astype(jnp.float32).reshape(bsz, nc, cl, n)
+    cf = c_mat.astype(jnp.float32).reshape(bsz, nc, cl, n)
+
+    da = dtf * a[None, None, None, :]                     # [B,nc,cl,H] (<= 0)
+    cs = jnp.cumsum(da, axis=2)                           # inclusive cumsum
+    seg_end = cs[:, :, -1, :]                             # [B,nc,H]
+    xdt = xf * dtf[..., None]                             # [B,nc,cl,H,P]
+
+    # --- intra-chunk (quadratic, attention-like) ---
+    # L[i,j,h] = exp(cs_i - cs_j) for i >= j (decay from j to i)
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # [B,nc,cl,cl,H]
+    tri = jnp.tril(jnp.ones((cl, cl), dtype=bool))
+    l_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", cf, bf)        # [B,nc,cl,cl]
+    y_diag = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, l_mat, xdt)
+
+    # --- per-chunk input state: sum_j exp(seg_end - cs_j) xdt_j ⊗ B_j ---
+    decay_out = jnp.exp(seg_end[:, :, None, :] - cs)      # [B,nc,cl,H]
+    state_c = jnp.einsum("bcjh,bcjhp,bcjn->bchpn", decay_out, xdt, bf)
+
+    # --- inter-chunk recurrence over chunk index ---
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), dtype=jnp.float32)
+    chunk_decay = jnp.exp(seg_end)                        # [B,nc,H]
+
+    def step(s, inp):
+        sc, dec = inp                                     # [B,H,P,N], [B,H]
+        s_in = s                                          # state BEFORE chunk
+        s = dec[..., None, None] * s + sc
+        return s, s_in
+
+    s_final, s_in = jax.lax.scan(
+        step, init_state,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                       # [B,nc,H,P,N]
+
+    # --- off-diagonal: carry-in state read out inside the chunk ---
+    decay_in = jnp.exp(cs)                                # [B,nc,cl,H]
+    y_off = jnp.einsum("bchpn,bcin,bcih->bcihp", s_in, cf, decay_in)
+
+    y = (y_diag + y_off).reshape(bsz, tp, h, p)[:, :t]
+    if d_skip is not None:
+        y = y + d_skip[None, None, :, None] * x.astype(jnp.float32)[:, :t]
+    return y, s_final
+
+
+def ssd_decode_step(state: Array, x_t: Array, dt_t: Array, a: Array,
+                    b_t: Array, c_t: Array,
+                    d_skip: Optional[Array] = None) -> Tuple[Array, Array]:
+    """One-token recurrence. state: [B,H,P,N]; x_t: [B,H,P]; dt_t: [B,H];
+    b_t/c_t: [B,N]. Returns (y [B,H,P], new_state)."""
+    decay = jnp.exp(dt_t * a[None, :])
+    upd = (dt_t[..., None] * x_t)[..., None] * b_t[:, None, None, :]
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_t)
+    if d_skip is not None:
+        y = y + d_skip[None, :, None] * x_t
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 mixer block
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+    dtype: object = jnp.float32
+    # run the temporal mixer through the Pallas kernel (kernels/ssd_scan).
+    # Off by default: the dry-run lowers on host devices where Mosaic is
+    # unavailable; flip on for real-TPU runs (kernel == pure-JAX path, see
+    # tests/test_kernels.py::test_ssd_scan_matches_model_chunked_form).
+    use_pallas: bool = False
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssd_block(key: Array, cfg: SSDConfig) -> Dict[str, Array]:
+    ks = jax.random.split(key, 4)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+    out_w = di * 2 + n * 2 + h
+    return {
+        "in_proj": layers.dense_init(ks[0], d, out_w, dtype=cfg.dtype),
+        "conv": (jax.random.normal(ks[1], (cfg.conv_width, di + 2 * n),
+                                   dtype=jnp.float32) * 0.2).astype(cfg.dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),            # A = -exp(a_log)=-1
+        "dt_bias": jnp.full((h,), math.log(math.e - 1), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": layers.init_rmsnorm(di),
+        "out_proj": layers.dense_init(ks[2], di, d, dtype=cfg.dtype),
+    }
+
+
+def ssd_block_spec(cfg: SSDConfig) -> Dict:
+    return {
+        "in_proj": ("embed", "state"), "conv": ("none", "state"),
+        "a_log": ("none",), "dt_bias": ("none",), "d_skip": ("none",),
+        "norm": {"scale": ("none",)}, "out_proj": ("state", "embed"),
+    }
+
+
+def _causal_conv(u: Array, w: Array) -> Array:
+    """Depthwise causal conv via shifted adds. u: [B,T,C]; w: [K,C]."""
+    k = w.shape[0]
+    out = u * w[-1]
+    for i in range(1, k):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def apply_ssd_block(params: Dict[str, Array], x: Array, cfg: SSDConfig
+                    ) -> Array:
+    """Train/prefill path. x: [B,T,D] -> [B,T,D]."""
+    b, t, d = x.shape
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = x @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv"]))
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    xin = shard(xin.reshape(b, t, h, cfg.head_dim), "batch", "seq", "heads",
+                None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    if cfg.use_pallas:
+        from repro.kernels import ops as kernel_ops
+        y = kernel_ops.ssd(xin, dt, a, bmat, cmat, params["d_skip"],
+                           chunk=cfg.chunk)
+    else:
+        y, _ = ssd_chunked(xin, dt, a, bmat, cmat, params["d_skip"],
+                           chunk=cfg.chunk)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+def init_ssd_cache(batch: int, cfg: SSDConfig, dtype=jnp.float32) -> Dict:
+    return {
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+        "conv_buf": jnp.zeros(
+            (batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.d_state),
+            dtype),
+    }
+
+
+def apply_ssd_block_decode(params: Dict[str, Array], x: Array,
+                           cache: Dict, cfg: SSDConfig
+                           ) -> Tuple[Array, Dict]:
+    """One-token decode. x: [B,1,D] -> ([B,1,D], cache)."""
+    b = x.shape[0]
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    zxbcdt = x[:, 0] @ params["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)   # [B, C]
+    hist = jnp.concatenate([cache["conv_buf"],
+                            conv_in[:, None, :].astype(
+                                cache["conv_buf"].dtype)], axis=1)
+    w = params["conv"]                                      # [K, C]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc",
+                                      hist.astype(jnp.float32),
+                                      w.astype(jnp.float32)))
+    new_buf = hist[:, 1:]
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    y, state = ssd_decode_step(cache["state"],
+                               xin.reshape(b, h, cfg.head_dim),
+                               dt, a, bmat, cmat, params["d_skip"])
+    y = y.reshape(b, di).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = (y @ params["out_proj"])[:, None, :]
+    return out, {"state": state, "conv_buf": new_buf}

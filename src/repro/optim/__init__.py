@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, adafactor, clip_by_global_norm, warmup_cosine,
+    make_optimizer)

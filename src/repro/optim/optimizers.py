@@ -1,0 +1,214 @@
+"""Optimizers (optax-like minimal interface, pytree states).
+
+* ``adamw`` — default for <=100B-class models (m, v in f32).
+* ``adafactor`` — factored second moment for the 340B/1T-class archs where
+  full Adam state does not fit v5e HBM (MaxText-standard choice).
+* optional int8 state quantization for AdamW moments (distributed-optimization
+  trick: halves/quarters optimizer-state HBM, error held in scales).
+
+State layout mirrors the param tree so the same sharding specs apply leafwise
+(FSDP shards optimizer state with its parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Array], Tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+# --- schedules / clipping ----------------------------------------------------
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1) -> Callable[[Array], Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+def global_norm(tree: PyTree) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), norm
+
+
+# --- int8 moment compression -------------------------------------------------
+
+class QTensor(NamedTuple):
+    codes: Array     # int8
+    scale: Array     # per-row (leading-dim) f32 scale
+
+
+def _q8(x: Array) -> QTensor:
+    if x.ndim == 0:
+        return QTensor(codes=x.astype(jnp.float32), scale=jnp.ones(()))
+    lead = x.shape[0]
+    flat = x.reshape(lead, -1).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    codes = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return QTensor(codes=codes.reshape(x.shape), scale=scale[:, 0])
+
+
+def _dq8(q: QTensor, shape) -> Array:
+    if q.codes.ndim == 0 or q.codes.dtype != jnp.int8:
+        return q.codes.astype(jnp.float32)
+    lead = shape[0]
+    flat = q.codes.reshape(lead, -1).astype(jnp.float32) * q.scale[:, None]
+    return flat.reshape(shape)
+
+
+# --- AdamW -------------------------------------------------------------------
+
+def adamw(lr: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          quantize_moments: bool = False) -> Optimizer:
+    if quantize_moments:
+        eps = max(eps, 1e-6)   # guard against zero-quantized denominators
+    def init(params):
+        def zeros_like_maybe_q(p):
+            z = jnp.zeros_like(p, dtype=jnp.float32)
+            return _q8(z) if quantize_moments else z
+        return {"m": jax.tree.map(zeros_like_maybe_q, params),
+                "v": jax.tree.map(zeros_like_maybe_q, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _step_unused=None):
+        step = state["step"] + 1
+        lr_t = lr(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m_old, v_old, p):
+            gf = g.astype(jnp.float32)
+            if quantize_moments:
+                # m quantized directly; v stored as int8 of sqrt(v) (halved
+                # dynamic range => ~0.8% relative error on the denominator)
+                m_prev = _dq8(m_old, p.shape)
+                v_prev = _dq8(v_old, p.shape) ** 2
+            else:
+                m_prev, v_prev = m_old, v_old
+            m = b1 * m_prev + (1 - b1) * gf
+            v = b2 * v_prev + (1 - b2) * gf * gf
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, (_q8(m) if quantize_moments else m), (
+                _q8(jnp.sqrt(v)) if quantize_moments else v)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init=init, update=update,
+                     name="adamw8" if quantize_moments else "adamw")
+
+
+# --- Adafactor ---------------------------------------------------------------
+
+def adafactor(lr: Callable, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment (Shazeer & Stern). Tensors with >=2 dims keep
+    row/col accumulators over the two largest dims; 0/1-dim keep full v."""
+
+    def _factored_dims(shape):
+        if len(shape) < 2:
+            return None
+        dims = sorted(range(len(shape)), key=lambda i: shape[i])[-2:]
+        return tuple(sorted(dims))
+
+    def init(params):
+        def make(p):
+            f = _factored_dims(p.shape)
+            if f is None:
+                return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+            d0, d1 = f
+            row_shape = tuple(s for i, s in enumerate(p.shape) if i != d1)
+            col_shape = tuple(s for i, s in enumerate(p.shape) if i != d0)
+            return {"vr": jnp.zeros(row_shape, jnp.float32),
+                    "vc": jnp.zeros(col_shape, jnp.float32)}
+        return {"mom": jax.tree.map(make, params,
+                                    is_leaf=lambda x: hasattr(x, "shape")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, _unused=None):
+        step = state["step"] + 1
+        lr_t = lr(step)
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, s, p):
+            f = _factored_dims(p.shape)
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if f is None:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            else:
+                d0, d1 = f
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=d1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=d0)
+                # V_hat = (vr ⊗ vc) / mean(vr): rank-1 second-moment estimate.
+                # d0 < d1, so d0 keeps its index inside vr (d1 was removed).
+                vr_e = jnp.expand_dims(vr, d1)
+                vc_e = jnp.expand_dims(vc, d0)
+                mean_r = jnp.expand_dims(vr.mean(axis=d0, keepdims=True), d1)
+                denom = vr_e * vc_e / jnp.maximum(mean_r, eps)
+                u = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["mom"])
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_s = treedef.unflatten([o[1] for o in out])
+        return new_p, {"mom": new_s, "step": step}
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def make_optimizer(kind: str, lr_schedule: Callable, **kw) -> Optimizer:
+    if kind == "adamw":
+        return adamw(lr_schedule, **kw)
+    if kind == "adamw8":
+        return adamw(lr_schedule, quantize_moments=True, **kw)
+    if kind == "adafactor":
+        return adafactor(lr_schedule, **kw)
+    raise ValueError(kind)

@@ -1,0 +1,388 @@
+"""Serving: prefill (build caches) and single-token decode steps.
+
+Cache layouts per layer type (stacked [repeats, ...] inside scanned stages):
+  attn  — K/V caches [B, T, Kv, hd]; T = max_len for full attention, the
+          window size for SWA/local layers (rolling ring buffer — softmax is
+          permutation-invariant over KV so ring order is fine).
+  ssd   — recurrent state [B, H, P, N] + depthwise-conv ring buffer.
+  rglru — hidden state [B, dr] + conv buffer.
+  cross — encoder K/V computed once at prefill, read-only at decode.
+
+``decode_step`` is the artifact lowered for the ``decode_32k``/``long_500k``
+dry-run cells: one new token against a cache of the given sequence length.
+SSM/hybrid archs carry O(1) state — that is their long_500k story.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import layers, moe as moe_lib, rglru as rglru_lib
+from repro.models import ssd as ssd_lib
+from repro.models import transformer as tfm
+from repro.models.transformer import LayerSpec, ModelConfig, Stage
+
+Array = jax.Array
+
+
+def _kv_len(spec: LayerSpec, cfg: ModelConfig, max_len: int) -> Tuple[int, bool]:
+    if spec.mixer == "swa" and cfg.window:
+        return min(cfg.window, max_len), True
+    if spec.mixer == "local" and cfg.local_window:
+        return min(cfg.local_window, max_len), True
+    return max_len, False
+
+
+def _init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      max_len: int, enc_len: int = 0) -> Dict[str, Array]:
+    c: Dict[str, Array] = {}
+    hd = cfg.resolved_head_dim
+    if spec.mixer in ("attn", "swa", "local"):
+        t, _ = _kv_len(spec, cfg, max_len)
+        shape = (batch, t, cfg.padded_kv_heads, hd)
+        c["k"] = jnp.zeros(shape, cfg.dtype)
+        c["v"] = jnp.zeros(shape, cfg.dtype)
+    elif spec.mixer == "ssd":
+        c.update(ssd_lib.init_ssd_cache(batch, cfg.ssd_cfg, cfg.dtype))
+    elif spec.mixer == "rglru":
+        c.update(rglru_lib.init_rglru_cache(batch, cfg.rglru_cfg, cfg.dtype))
+    if spec.cross_attn:
+        c["ck"] = jnp.zeros((batch, enc_len, cfg.padded_kv_heads, hd),
+                            cfg.dtype)
+        c["cv"] = jnp.zeros((batch, enc_len, cfg.padded_kv_heads, hd),
+                            cfg.dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> list:
+    """Cache pytree parallel to params["stages"]."""
+    out = []
+    for stage in tfm.stages_for(cfg):
+        blk = {f"l{i}": _init_layer_cache(sp, cfg, batch, max_len, enc_len)
+               for i, sp in enumerate(stage.block)}
+        if stage.repeats > 1:
+            blk = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (stage.repeats,) + x.shape), blk)
+        out.append(blk)
+    return out
+
+
+def cache_spec(cfg: ModelConfig) -> list:
+    """Logical sharding names for the cache pytree (kv_heads falls back to
+    head_dim sharding when the head count does not divide the model axis)."""
+    kv_tail = "head_dim" if cfg.kv_shard_mode == "head_dim" else "none"
+
+    def layer_spec(spec: LayerSpec):
+        s = {}
+        if spec.mixer in ("attn", "swa", "local"):
+            s["k"] = ("batch", "seq", "kv_heads", kv_tail)
+            s["v"] = ("batch", "seq", "kv_heads", kv_tail)
+        elif spec.mixer == "ssd":
+            s["state"] = ("batch", "heads", "none", "none")
+            s["conv_buf"] = ("batch", "none", "state")
+        elif spec.mixer == "rglru":
+            s["h"] = ("batch", "state")
+            s["conv_buf"] = ("batch", "none", "state")
+        if spec.cross_attn:
+            s["ck"] = ("batch", "seq", "kv_heads", kv_tail)
+            s["cv"] = ("batch", "seq", "kv_heads", kv_tail)
+        return s
+    out = []
+    for stage in tfm.stages_for(cfg):
+        blk = {f"l{i}": layer_spec(sp) for i, sp in enumerate(stage.block)}
+        if stage.repeats > 1:
+            blk = jax.tree.map(lambda n: ("layers",) + n, blk,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        out.append(blk)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _qkv(p, xn, cfg: ModelConfig, which: str = "attn"):
+    q = jnp.einsum("bsd,dhk->bshk", xn, p[which]["wq"].astype(cfg.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, p[which]["wk"].astype(cfg.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xn, p[which]["wv"].astype(cfg.dtype))
+    if "bq" in p[which]:
+        q = q + p[which]["bq"].astype(cfg.dtype)
+        k = k + p[which]["bk"].astype(cfg.dtype)
+        v = v + p[which]["bv"].astype(cfg.dtype)
+    return q, k, v
+
+
+def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
+                  index: Array):
+    """x: [B, 1, D]; index: scalar count of tokens so far (0-based pos)."""
+    new_cache = dict(cache)
+    if spec.mixer in ("attn", "swa", "local"):
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        q, k, v = _qkv(p, xn, cfg)
+        if cfg.rope_theta:
+            pos = jnp.full((1,), index)
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            k = layers.apply_rope(k, pos, cfg.rope_theta)
+        rolling = spec.mixer in ("swa", "local")
+        ck, cv = attn_lib.cache_update(cache["k"], cache["v"], k, v, index,
+                                       rolling=rolling)
+        new_cache["k"], new_cache["v"] = ck, cv
+        o = attn_lib.decode_attention(q, ck, cv, index + 1, rolling=rolling)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["attn"]["wo"].astype(cfg.dtype))
+    elif spec.mixer == "ssd":
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        y, sc = ssd_lib.apply_ssd_block_decode(
+            p["ssd"], xn, {"state": cache["state"],
+                           "conv_buf": cache["conv_buf"]}, cfg.ssd_cfg)
+        new_cache.update(sc)
+        x = x + y.astype(x.dtype)
+    elif spec.mixer == "rglru":
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        y, rc = rglru_lib.apply_rglru_block_decode(
+            p["rglru"], xn, {"h": cache["h"],
+                             "conv_buf": cache["conv_buf"]}, cfg.rglru_cfg)
+        new_cache.update(rc)
+        x = x + y.astype(x.dtype)
+    if spec.cross_attn:
+        xn = layers.NORM_APPLY[cfg.norm](p["cross_norm"], x)
+        q = jnp.einsum("bsd,dhk->bshk", xn, p["cross"]["wq"].astype(cfg.dtype))
+        o = attn_lib.decode_attention(q, cache["ck"], cache["cv"],
+                                      cache["ck"].shape[1])
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["cross"]["wo"].astype(cfg.dtype))
+    if spec.ffn == "mlp":
+        x = x + tfm._mlp_ffn(p, x, cfg)
+    elif spec.ffn == "moe":
+        xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
+        y, _ = moe_lib.apply_moe(p["moe"], xn, cfg.moe_cfg,
+                                 weights_stationary=cfg.moe_serve_stationary)
+        x = x + y
+    elif spec.ffn == "kan":
+        xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
+        from repro.core import kan_layer
+        x = x + kan_layer.apply_kan_ffn(p["kan"], xn, cfg.kan_cfg
+                                        ).astype(x.dtype)
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens: Array, index: Array,
+                cfg: ModelConfig) -> Tuple[Array, list]:
+    """One decode step. tokens: [B, 1] -> (logits [B, 1, V], new cache)."""
+    x = layers.embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    if cfg.family == "encdec":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], index, 1, axis=0).astype(cfg.dtype)[None]
+    stages = tfm.stages_for(cfg)
+    new_caches = []
+    for st_params, st_cache, stage in zip(params["stages"], cache, stages):
+        if stage.repeats == 1:
+            nc = {}
+            for i, sp in enumerate(stage.block):
+                x, nc[f"l{i}"] = _decode_layer(
+                    st_params[f"l{i}"], st_cache[f"l{i}"], x, sp, cfg, index)
+            new_caches.append(nc)
+        else:
+            def body(carry, inp, stage=stage):
+                xx = carry
+                lp, lc = inp
+                nc = {}
+                for i, sp in enumerate(stage.block):
+                    xx, nc[f"l{i}"] = _decode_layer(
+                        lp[f"l{i}"], lc[f"l{i}"], xx, sp, cfg, index)
+                return xx, nc
+            x, nc = jax.lax.scan(body, x, (st_params, st_cache))
+            new_caches.append(nc)
+    x = layers.NORM_APPLY[cfg.norm](params["final_norm"], x)
+    table = params.get("unembed", params["embed"])
+    logits = layers.unembed(x, table.astype(cfg.dtype))
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def _prefill_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
+                   positions, enc_out=None):
+    new_cache = dict(cache)
+    if spec.mixer in ("attn", "swa", "local"):
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        q, k, v = _qkv(p, xn, cfg)
+        if cfg.rope_theta:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+        t_cache = cache["k"].shape[1]
+        if spec.mixer in ("swa", "local"):
+            win = cfg.window if spec.mixer == "swa" else cfg.local_window
+            o = attn_lib.windowed_attention(q, k, v, window=win)
+            s = k.shape[1]
+            if s <= t_cache:        # prompt fits: slots i == position i
+                pad = t_cache - s
+                new_cache["k"] = jnp.pad(
+                    k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.dtype)
+                new_cache["v"] = jnp.pad(
+                    v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.dtype)
+            else:                   # ring-order the last t_cache tokens
+                tail_k, tail_v = k[:, -t_cache:], v[:, -t_cache:]
+                slots = (jnp.arange(s - t_cache, s)) % t_cache
+                order = jnp.argsort(slots)
+                new_cache["k"] = tail_k[:, order].astype(cfg.dtype)
+                new_cache["v"] = tail_v[:, order].astype(cfg.dtype)
+        else:
+            o = attn_lib.chunked_attention(q, k, v, causal=True,
+                                           kv_chunk=cfg.attn_kv_chunk)
+            pad = t_cache - k.shape[1]
+            new_cache["k"] = jnp.pad(
+                k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.dtype)
+            new_cache["v"] = jnp.pad(
+                v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.dtype)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["attn"]["wo"].astype(cfg.dtype))
+    elif spec.mixer == "ssd":
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        y, sc = _ssd_prefill(p["ssd"], xn, cfg)
+        new_cache.update(sc)
+        x = x + y.astype(x.dtype)
+    elif spec.mixer == "rglru":
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        y, rc = _rglru_prefill(p["rglru"], xn, cfg)
+        new_cache.update(rc)
+        x = x + y.astype(x.dtype)
+    if spec.cross_attn and enc_out is not None:
+        xn = layers.NORM_APPLY[cfg.norm](p["cross_norm"], x)
+        q, ck, cv = _qkv(p, xn, cfg, "cross")
+        ck = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p["cross"]["wk"].astype(cfg.dtype))
+        cv = jnp.einsum("bsd,dhk->bshk", enc_out,
+                        p["cross"]["wv"].astype(cfg.dtype))
+        o = attn_lib.chunked_attention(q, ck, cv, causal=False,
+                                       kv_chunk=cfg.attn_kv_chunk)
+        new_cache["ck"], new_cache["cv"] = ck, cv
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["cross"]["wo"].astype(cfg.dtype))
+    if spec.ffn == "mlp":
+        x = x + tfm._mlp_ffn(p, x, cfg)
+    elif spec.ffn == "moe":
+        xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
+        y, _ = moe_lib.apply_moe(p["moe"], xn, cfg.moe_cfg)
+        x = x + y
+    elif spec.ffn == "kan":
+        from repro.core import kan_layer
+        xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
+        x = x + kan_layer.apply_kan_ffn(p["kan"], xn, cfg.kan_cfg
+                                        ).astype(x.dtype)
+    return x, new_cache
+
+
+def _ssd_prefill(p, x, cfg: ModelConfig):
+    """Like apply_ssd_block but also returns the final recurrent state."""
+    scfg = cfg.ssd_cfg
+    b, t, _ = x.shape
+    di, n, h = scfg.d_inner, scfg.d_state, scfg.n_heads
+    zxbcdt = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_buf = conv_in[:, -(scfg.conv_width - 1):].astype(cfg.dtype)
+    conv_out = jax.nn.silu(ssd_lib._causal_conv(conv_in, p["conv"]))
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_lib.ssd_chunked(
+        xin.reshape(b, t, h, scfg.head_dim), dtp, a, bmat, cmat,
+        p["d_skip"], chunk=scfg.chunk)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"state": state, "conv_buf": conv_buf}
+
+
+def _rglru_prefill(p, x, cfg: ModelConfig):
+    rcfg = cfg.rglru_cfg
+    gate = jax.nn.gelu(x @ p["w_gate"])
+    main = x @ p["w_main"]
+    conv_buf = main[:, -(rcfg.conv_width - 1):].astype(cfg.dtype)
+    main = ssd_lib._causal_conv(main, p["conv"])
+    h = rglru_lib.rglru_scan(p, main)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return y, {"h": h[:, -1], "conv_buf": conv_buf}
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Array],
+            max_len: int, last_only: bool = False) -> Tuple[Array, list]:
+    """Run the prompt, return (logits, cache at position S). With
+    ``last_only`` (production serving) only the final position is unembedded
+    — the full [B,S,V] logits tensor never materializes."""
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = tfm.encode(params, cfg, batch)
+        # decoder side: token embedding + learned positions (no frontend)
+        x = layers.embed_lookup(params["embed"], batch["tokens"]
+                                ).astype(cfg.dtype)
+        x = x + params["dec_pos"][:x.shape[1]].astype(cfg.dtype)[None]
+    else:
+        x = tfm.embed_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])
+    stages = tfm.stages_for(cfg)
+    b = x.shape[0]
+    enc_len = enc_out.shape[1] if enc_out is not None else 0
+    cache = init_cache(cfg, b, max_len, enc_len)
+    new_caches = []
+    for st_params, st_cache, stage in zip(params["stages"], cache, stages):
+        if stage.repeats == 1:
+            nc = {}
+            for i, sp in enumerate(stage.block):
+                x, nc[f"l{i}"] = _prefill_layer(
+                    st_params[f"l{i}"], st_cache[f"l{i}"], x, sp, cfg,
+                    positions, enc_out)
+            new_caches.append(nc)
+        else:
+            def body(carry, inp, stage=stage):
+                xx = carry
+                lp, lc = inp
+                nc = {}
+                for i, sp in enumerate(stage.block):
+                    xx, nc[f"l{i}"] = _prefill_layer(
+                        lp[f"l{i}"], lc[f"l{i}"], xx, sp, cfg, positions,
+                        enc_out)
+                return xx, nc
+            fn = jax.checkpoint(body) if cfg.remat else body
+            x, nc = jax.lax.scan(fn, x, (st_params, st_cache))
+            new_caches.append(nc)
+    if last_only:
+        x = x[:, -1:]
+    x = layers.NORM_APPLY[cfg.norm](params["final_norm"], x)
+    table = params.get("unembed", params["embed"])
+    logits = layers.unembed(x, table.astype(cfg.dtype))
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return logits, new_caches
+
+
+def generate(params, cfg: ModelConfig, prompt: Array, n_new: int,
+             max_len: Optional[int] = None) -> Array:
+    """Greedy generation (functional loop, used by examples/tests)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + n_new)
+    logits, cache = prefill(params, cfg, {"tokens": prompt}, max_len)
+    tok = jnp.argmax(logits[:, -1:], axis=-1)
+    out = [tok]
+
+    def step(carry, i):
+        tok, cache = carry
+        logits, cache = decode_step(params, cache, tok, s + i, cfg)
+        nxt = jnp.argmax(logits[:, -1:, :], axis=-1)
+        return (nxt, cache), nxt
+
+    (_, _), toks = jax.lax.scan(step, (tok, cache), jnp.arange(n_new - 1))
+    rest = jnp.swapaxes(toks[..., 0], 0, 1)
+    return jnp.concatenate([out[0], rest], axis=1)

@@ -1,0 +1,70 @@
+"""Dry-run integration: every (arch × kind) builds, lowers and compiles on a
+forced 8-device mesh (the 512-device production sweep runs via
+``python -m repro.launch.dryrun --all [--multi-pod]``; its results live in
+results/dryrun*/)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys, jax, dataclasses
+    from repro.configs import get_arch, ShapeSpec
+    from repro.launch import dryrun as dr
+
+    arch_id, kind = sys.argv[1], sys.argv[2]
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    arch = get_arch(arch_id, smoke=True)
+    arch = dataclasses.replace(arch, accum_steps=2)
+    shape = {"train": ShapeSpec("t", 64, 8, "train"),
+             "prefill": ShapeSpec("p", 64, 4, "prefill"),
+             "decode": ShapeSpec("d", 64, 8, "decode")}[kind]
+    with mesh:
+        fn, args = dr.build_cell(arch, shape, mesh)
+        compiled = jax.jit(fn).lower(*args).compile()
+        cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+    print("DRYRUN_OK", arch_id, kind)
+""")
+
+ARCHS = ["whisper_base", "recurrentgemma_2b", "kimi_k2_1t_a32b",
+         "mixtral_8x7b", "qwen2_72b", "mamba2_1p3b", "internvl2_76b"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch_id", ARCHS)
+@pytest.mark.parametrize("kind", ["train", "decode"])
+def test_dryrun_cell_multipod_smoke(tmp_path, arch_id, kind):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "../src"))
+    script = str(tmp_path / "cell.py")
+    with open(script, "w") as f:
+        f.write(SCRIPT)
+    out = subprocess.run([sys.executable, script, arch_id, kind],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DRYRUN_OK" in out.stdout
+
+
+def test_collective_traffic_parser():
+    from repro import analysis
+    hlo = """
+  %all-gather.6 = f32[8192,8,8]{2,1,0} all-gather(%x), channel_id=29, replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %all-reduce.1 = bf16[1024]{0} all-reduce(%y), channel_id=3, replica_groups=[4,64]<=[256], to_apply=%add
+  %rs = f32[64]{0} reduce-scatter(%z), channel_id=5, replica_groups=[16,16]<=[256], dimensions={0}
+  %ar-done = f32[8]{0} all-reduce-done(%w)
+"""
+    t = analysis.collective_traffic(hlo, 256)
+    ag = 8192 * 8 * 8 * 4 * 15 / 16
+    ar = 1024 * 2 * 2 * 63 / 64
+    rs = 64 * 4 * 15
+    assert abs(t["all-gather"] - ag) < 1
+    assert abs(t["all-reduce"] - ar) < 1
+    assert abs(t["reduce-scatter"] - rs) < 1
+    assert t["total"] == pytest.approx(ag + ar + rs)

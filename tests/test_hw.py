@@ -1,0 +1,145 @@
+"""Hardware model: cost-model anchors vs the paper's published numbers."""
+import math
+
+import pytest
+
+from repro.core.quant import ASPConfig
+from repro.hw import cim, cost_model, input_gen, neurosim
+
+
+# --- Fig. 12/13 (ASP-KAN-HAQ area/energy reductions) -------------------------
+
+def _ratios():
+    ra, re = [], []
+    for g in (8, 16, 32, 64):
+        cfg = ASPConfig(grid_size=g)
+        ra.append(cost_model.conventional_bx_area(cfg)
+                  / cost_model.asp_bx_area(cfg))
+        re.append(cost_model.conventional_bx_energy(cfg)
+                  / cost_model.asp_bx_energy(cfg))
+    return ra, re
+
+
+def test_fig12_area_anchors():
+    ra, _ = _ratios()
+    assert ra[0] == pytest.approx(33.97, rel=0.02)   # G=8
+    assert ra[-1] == pytest.approx(44.24, rel=0.02)  # G=64
+    assert sum(ra) / 4 == pytest.approx(40.14, rel=0.02)
+    assert ra == sorted(ra)                           # monotone in G
+
+
+def test_fig13_energy_anchors():
+    _, re = _ratios()
+    assert re[0] == pytest.approx(7.12, rel=0.02)
+    assert re[-1] == pytest.approx(4.67, rel=0.02)
+    assert sum(re) / 4 == pytest.approx(5.74, rel=0.02)
+    assert re == sorted(re, reverse=True)
+
+
+def test_powergap_structure_savings():
+    s = cost_model.powergap_structure(ASPConfig(grid_size=5))
+    assert s["decoder_units_after"] < s["decoder_units_before"]
+    assert s["sh_lut_bits"] < s["conventional_lut_bits"] / 20
+
+
+# --- Figs. 14-17 (WL input schemes) ------------------------------------------
+
+def test_n3_anchors():
+    t = input_gen.scheme_table(3)
+    assert t["voltage"].area / t["tmdv"].area == pytest.approx(1.96, rel=0.02)
+    assert t["voltage"].power / t["tmdv"].power == pytest.approx(11.9,
+                                                                 rel=0.02)
+    assert t["pwm"].latency / t["tmdv"].latency == pytest.approx(8.0)
+    assert t["pwm"].area / t["tmdv"].area == pytest.approx(1.07, rel=0.02)
+    assert t["tmdv"].fom / t["voltage"].fom == pytest.approx(3.0, rel=0.05)
+    assert t["tmdv"].fom / t["pwm"].fom == pytest.approx(4.1, rel=0.05)
+
+
+def test_fom_ordering_by_n():
+    t1 = input_gen.scheme_table(1)
+    assert max(t1, key=lambda s: t1[s].fom) == "voltage"   # N=1: voltage wins
+    assert min(t1, key=lambda s: t1[s].fom) == "tmdv"
+    assert min(t1, key=lambda s: t1[s].power) == "pwm"     # PWM best power
+    for n in (2, 3, 4):
+        tn = input_gen.scheme_table(n)
+        assert max(tn, key=lambda s: tn[s].fom) == "tmdv"  # N>1: TM-DV wins
+
+
+# --- Fig. 19 (accelerator scale model) ---------------------------------------
+
+def test_fig19_operating_points():
+    c1 = cost_model.accelerator_cost(39_000_000)
+    c2 = cost_model.accelerator_cost(63_000_000)
+    assert c1.area_mm2 == pytest.approx(97.76, rel=0.01)
+    assert c1.power_w == pytest.approx(0.079, rel=0.01)
+    assert c1.latency_ns == pytest.approx(3648, rel=0.01)
+    assert c1.energy_nj == pytest.approx(289.6, rel=0.01)
+    assert c2.area_mm2 == pytest.approx(142.24, rel=0.01)
+    assert c2.energy_nj == pytest.approx(645.9, rel=0.01)
+
+
+def test_headline_scaling_multipliers():
+    """Params x500K-807K but area only x28K-41K and power x51-94 (abstract)."""
+    pt = cost_model.PRIOR_TINY
+    c1 = cost_model.accelerator_cost(39_000_000)
+    c2 = cost_model.accelerator_cost(63_000_000)
+    assert c1.params / pt.params == pytest.approx(500_000, rel=0.01)
+    assert c2.params / pt.params == pytest.approx(807_692, rel=0.01)
+    assert c1.area_mm2 / pt.area_mm2 == pytest.approx(28_564, rel=0.02)
+    assert c2.area_mm2 / pt.area_mm2 == pytest.approx(41_560, rel=0.02)
+    assert c1.power_w / pt.power_w == pytest.approx(51, rel=0.02)
+    assert c2.power_w / pt.power_w == pytest.approx(94, rel=0.02)
+
+
+# --- CIM error model ----------------------------------------------------------
+
+def test_irdrop_grows_with_array_size():
+    import jax, jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    v = jax.random.uniform(key, (16, 1024))
+    w = jax.random.randint(key, (1024, 8), -127, 128, dtype=jnp.int8)
+    errs = [cim.mac_error_rate(v, w, cim.CIMConfig(array_size=a))
+            for a in (128, 256, 512, 1024)]
+    assert errs == sorted(errs)  # monotone in As (Fig. 18 x-axis trend)
+
+
+# --- KAN-NeuroSim loop ---------------------------------------------------------
+
+def test_neurosim_budget_screening():
+    asp = ASPConfig(grid_size=32)
+    budget = cost_model.HardwareBudget(max_area_mm2=100.0)
+    out = neurosim.screen_constraints(
+        asp, budget, count_params=lambda a: 30_000_000 + a.grid_size * 100_000,
+        n_channels=1024)
+    assert out is not None and out.grid_size <= 32
+    tight = cost_model.HardwareBudget(max_area_mm2=0.001)
+    assert neurosim.screen_constraints(
+        asp, tight, count_params=lambda a: 10 ** 7, n_channels=1) is None
+
+
+def test_neurosim_grid_extension_reverts_on_budget():
+    asp = ASPConfig(grid_size=4)
+    calls = {"train": 0}
+
+    def train_epochs(params, a, n):
+        calls["train"] += 1
+        return params
+
+    losses = iter([1.0, 0.9, 0.8, 0.7, 0.6, 0.5])
+
+    def val_loss(params, a):
+        return next(losses)
+
+    budget = cost_model.HardwareBudget(max_area_mm2=200.0)
+    res = neurosim.grid_extension_training(
+        params={}, asp=asp, train_epochs=train_epochs, val_loss=val_loss,
+        extend_coeffs=lambda p, a, b: p,
+        count_params=lambda a: int(20_000_000 * (1 + a.grid_size / 8)),
+        budget=budget, extend_every=1, extend_by=4, max_epochs=5)
+    assert res.asp.grid_size >= 4
+    actions = [h.action for h in res.history]
+    assert "extended" in actions or "extension-rejected-budget" in actions
+    # budget respected at every extension
+    for h in res.history:
+        if h.action == "extended":
+            assert h.cost.area_mm2 <= 200.0

@@ -1,0 +1,130 @@
+"""KAN-SAM (Algorithm 1) + sensitivity grid assignment (Algorithm 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kan_sam, quant, sensitivity
+from repro.core.quant import ASPConfig
+from repro.hw import cim
+
+
+def _stats_and_codes(key, i=16, o=8, b=512, g=7, x_std=0.3):
+    asp = ASPConfig(grid_size=g)
+    x = jnp.clip(jax.random.normal(key, (b, i)) * x_std, -0.999, 0.999)
+    stats = kan_sam.update_stats(kan_sam.init_stats(i, asp), x, asp)
+    coeffs = jax.random.normal(jax.random.fold_in(key, 1), (i, asp.n_basis, o))
+    codes, _ = quant.quantize_coeffs(coeffs, asp, axis=(0, 1))
+    return asp, x, stats, codes
+
+
+def test_phase_a_statistics():
+    """Counts/means match the K+1-sparsity structure."""
+    asp = ASPConfig(grid_size=7)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (256, 4), minval=-1, maxval=1)
+    stats = kan_sam.update_stats(kan_sam.init_stats(4, asp), x, asp)
+    # every sample activates exactly K+1 bases per channel
+    total = float(stats.cnt.sum())
+    assert total == pytest.approx(256 * 4 * (asp.order + 1))
+    assert stats.n_samples == 256
+    assert bool((stats.p <= 1.0).all())
+    assert bool((stats.var >= 0).all())
+
+
+def test_criticality_favors_probable_and_stable():
+    asp, x, stats, codes = _stats_and_codes(jax.random.PRNGKey(1))
+    cw = kan_sam.criticality(stats, codes)
+    # central bases (activated by the gaussian bulk) must outrank edge bases
+    center = cw[:, asp.n_basis // 2].mean()
+    edge = cw[:, 0].mean() + cw[:, -1].mean()
+    assert float(center) > float(edge)
+
+
+def test_alpha_beta_constraint():
+    asp, x, stats, codes = _stats_and_codes(jax.random.PRNGKey(2))
+    with pytest.raises(ValueError):
+        kan_sam.criticality(stats, codes, alpha=0.9, beta=0.9)
+
+
+def test_row_mapping_is_permutation():
+    asp, x, stats, codes = _stats_and_codes(jax.random.PRNGKey(3))
+    cw = kan_sam.criticality(stats, codes)
+    phys, inv = kan_sam.row_mapping(cw)
+    r = cw.size
+    assert sorted(np.asarray(phys).tolist()) == list(range(r))
+    np.testing.assert_array_equal(np.asarray(phys)[np.asarray(inv)],
+                                  np.arange(r))
+
+
+def test_highest_criticality_gets_nearest_row():
+    asp, x, stats, codes = _stats_and_codes(jax.random.PRNGKey(4))
+    cw = kan_sam.criticality(stats, codes)
+    phys, _ = kan_sam.row_mapping(cw)
+    best = int(jnp.argmax(cw.reshape(-1)))
+    assert int(phys[best]) == 0
+
+
+def test_sam_reduces_weighted_attenuation():
+    """The criticality-weighted IR-drop exposure must never be worse than
+    the identity mapping (sorting minimizes the weighted sum)."""
+    asp, x, stats, codes = _stats_and_codes(jax.random.PRNGKey(5))
+    cw = kan_sam.criticality(stats, codes)
+    ccfg = cim.CIMConfig(array_size=512)
+    pos_att = cim.row_attenuation(cw.size, ccfg)
+    att_sam = kan_sam.sam_attenuation(cw, pos_att)
+    exposure_sam = float((cw * (1 - att_sam)).sum())
+    exposure_id = float((cw.reshape(-1) * (1 - pos_att)).sum())
+    assert exposure_sam <= exposure_id + 1e-6
+
+
+def test_sam_improves_mac_error():
+    asp, x, stats, codes = _stats_and_codes(jax.random.PRNGKey(6), b=256)
+    hemi = quant.hemi_for(asp)
+    basis = quant.quantized_basis(x, hemi, asp).reshape(x.shape[0], -1)
+    w = codes.reshape(-1, codes.shape[-1])
+    ccfg = cim.CIMConfig(array_size=512)
+    cw = kan_sam.criticality(stats, codes)
+    att = kan_sam.sam_attenuation(
+        cw, cim.row_attenuation(w.shape[0], ccfg)).reshape(-1)
+    e_uniform = cim.mac_error_rate(basis, w, ccfg)
+    e_sam = cim.mac_error_rate(basis, w, ccfg, atten_of_logical=att)
+    assert e_sam < e_uniform
+
+
+# --- Algorithm 2 -------------------------------------------------------------
+
+def test_sensitivity_grid_assignment_tiers():
+    sens = {f"l{i}": float(v) for i, v in enumerate(
+        [10.0, 5.0, 2.0, 1.0, 0.5, 0.1])}
+    ga = sensitivity.assign_grids(sens, g_high=16, g_med=8, g_low=4)
+    assert ga.classes["l0"] == "HIGH" and ga.grids["l0"] == 16
+    assert ga.classes["l5"] == "LOW" and ga.grids["l5"] == 4
+    counts = {c: list(ga.classes.values()).count(c)
+              for c in ("HIGH", "MEDIUM", "LOW")}
+    assert counts["HIGH"] >= 1 and counts["LOW"] >= 1
+
+
+def test_sensitivity_profiling_runs():
+    """End-to-end Phase 1 on a toy 2-layer KAN stack."""
+    from repro.core import kan_layer
+    from repro.core.kan_layer import KANLayerConfig
+    key = jax.random.PRNGKey(0)
+    asp = ASPConfig(grid_size=5)
+    c1 = KANLayerConfig(8, 8, asp, impl="ref")
+    c2 = KANLayerConfig(8, 4, asp, impl="ref")
+    params = {"a": kan_layer.init_kan_layer(key, c1),
+              "b": kan_layer.init_kan_layer(jax.random.fold_in(key, 1), c2)}
+
+    def loss(p, x, y):
+        h = kan_layer.apply_kan_layer(p["a"], x, c1)
+        out = kan_layer.apply_kan_layer(p["b"], h, c2)
+        return jnp.mean((out - y) ** 2)
+
+    batches = [(jax.random.normal(jax.random.PRNGKey(i), (16, 8)),
+                jax.random.normal(jax.random.PRNGKey(i + 9), (16, 4)))
+               for i in range(3)]
+    sens = sensitivity.layer_sensitivities(
+        loss, params, batches, ["a/coeffs", "b/coeffs"])
+    assert set(sens) == {"a/coeffs", "b/coeffs"}
+    assert all(v > 0 for v in sens.values())

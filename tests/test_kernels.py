@@ -1,0 +1,144 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.quant import ASPConfig
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("g", [5, 8, 16, 64])
+@pytest.mark.parametrize("shape", [(8, 8, 8), (37, 23, 50), (128, 64, 128),
+                                   (5, 130, 3)])
+def test_kan_fused_matches_oracle(g, shape):
+    b, i, o = shape
+    cfg = ASPConfig(grid_size=g, order=3)
+    key = jax.random.PRNGKey(b * i + o + g)
+    x = jax.random.uniform(key, (b, i), minval=-1, maxval=1)
+    coeffs = jax.random.normal(jax.random.fold_in(key, 1),
+                               (i, cfg.n_basis, o)) * 0.3
+    codes, scale = quant.quantize_coeffs(coeffs, cfg, axis=(0, 1))
+    want = ref.kan_spline_ref(x, codes, scale.reshape(-1), cfg)
+    got = ops.kan_spline_fused(x, coeffs, cfg)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("order", [2, 3])
+def test_kan_fused_orders(order):
+    cfg = ASPConfig(grid_size=6, order=order)
+    key = jax.random.PRNGKey(order)
+    x = jax.random.uniform(key, (16, 12), minval=-1, maxval=1)
+    coeffs = jax.random.normal(key, (12, cfg.n_basis, 8)) * 0.5
+    codes, scale = quant.quantize_coeffs(coeffs, cfg, axis=(0, 1))
+    want = ref.kan_spline_ref(x, codes, scale.reshape(-1), cfg)
+    got = ops.kan_spline_fused(x, coeffs, cfg)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-5)
+
+
+def test_kan_fused_input_dtypes():
+    cfg = ASPConfig(grid_size=5)
+    key = jax.random.PRNGKey(0)
+    x32 = jax.random.uniform(key, (16, 8), minval=-1, maxval=1)
+    coeffs = jax.random.normal(key, (8, cfg.n_basis, 8))
+    y32 = ops.kan_spline_fused(x32, coeffs, cfg)
+    ybf = ops.kan_spline_fused(x32.astype(jnp.bfloat16),
+                               coeffs.astype(jnp.bfloat16), cfg)
+    assert ybf.dtype == jnp.bfloat16
+    # bf16 quantization of the input may shift codes by 1 cell; compare
+    # loosely (the forward itself is exact given the quantized codes).
+    assert float(jnp.mean(jnp.abs(ybf.astype(jnp.float32) - y32))) < 0.3
+
+
+def test_kan_fused_gradients_match_qat_convention():
+    """d/dcoeffs must equal the exact quantized-basis outer product; d/dx
+    must equal the float-path derivative (STE)."""
+    cfg = ASPConfig(grid_size=5)
+    key = jax.random.PRNGKey(3)
+    x = jax.random.uniform(key, (9, 7), minval=-0.9, maxval=0.9)
+    coeffs = jax.random.normal(key, (7, cfg.n_basis, 4))
+    dy = jax.random.normal(jax.random.fold_in(key, 1), (9, 4))
+
+    _, vjp = jax.vjp(lambda c: ops.kan_spline_fused(x, c, cfg), coeffs)
+    (dc,) = vjp(dy)
+    hemi = quant.hemi_for(cfg)
+    eq = quant.quantized_basis(x, hemi, cfg)
+    want_dc = jnp.einsum("bis,bo->iso", eq, dy)
+    np.testing.assert_allclose(dc, want_dc, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("array_size", [64, 128, 256])
+@pytest.mark.parametrize("shape", [(9, 100, 17), (32, 256, 64)])
+def test_cim_mac_matches_oracle(array_size, shape):
+    b, r, c = shape
+    key = jax.random.PRNGKey(r)
+    v = jax.random.uniform(key, (b, r))
+    w = jax.random.randint(jax.random.fold_in(key, 1), (r, c), -127, 128,
+                           dtype=jnp.int8)
+    att = 1.0 - 0.05 * (jnp.arange(r) % array_size) / array_size
+    got = ops.cim_mac(v, w, att, array_size=array_size, adc_bits=8)
+    want = ref.cim_mac_ref(v, w, att, array_size, 8)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=1e-4)
+
+
+def test_cim_mac_adc_quantization_visible():
+    """Coarser ADC must increase error vs the ideal MAC."""
+    key = jax.random.PRNGKey(0)
+    v = jax.random.uniform(key, (16, 256))
+    w = jax.random.randint(key, (256, 32), -127, 128, dtype=jnp.int8)
+    att = jnp.ones((256,))
+    ideal = ref.cim_mac_ideal(v, w)
+    err = []
+    for bits in (4, 6, 8):
+        y = ops.cim_mac(v, w, att, array_size=256, adc_bits=bits,
+                        in_scale=0.2)
+        err.append(float(jnp.mean(jnp.abs(y - ideal))))
+    assert err[0] > err[1] > err[2]
+
+
+def test_cim_mac_irdrop_attenuation_effect():
+    key = jax.random.PRNGKey(1)
+    v = jax.random.uniform(key, (8, 128))
+    w = jax.random.randint(key, (128, 16), -127, 128, dtype=jnp.int8)
+    ideal = ref.cim_mac_ideal(v, w)
+    y_clean = ops.cim_mac(v, w, jnp.ones(128), array_size=128, adc_bits=12)
+    y_drop = ops.cim_mac(v, w, 1.0 - 0.1 * jnp.arange(128) / 128,
+                         array_size=128, adc_bits=12)
+    e_clean = float(jnp.mean(jnp.abs(y_clean - ideal)))
+    e_drop = float(jnp.mean(jnp.abs(y_drop - ideal)))
+    assert e_drop > e_clean * 2
+
+
+@pytest.mark.parametrize("shape", [(2, 37, 3, 8, 16), (1, 64, 2, 16, 8)])
+@pytest.mark.parametrize("chunk", [8, 16])
+def test_ssd_scan_kernel_matches_oracle(shape, chunk):
+    b, t, h, p, n = shape
+    key = jax.random.PRNGKey(t + chunk)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, t, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, t, n)) * 0.3
+    d = jnp.ones((h,)) * 0.5
+    want, _ = ref.ssd_ref(x, dt, a, bm, cm, d)
+    got = ops.ssd(x, dt, a, bm, cm, d, chunk=chunk)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=1e-4)
+
+
+def test_ssd_scan_matches_model_chunked_form():
+    """Kernel vs the pure-JAX chunked SSD used inside the LM stack."""
+    from repro.models import ssd as mssd
+    key = jax.random.PRNGKey(7)
+    b, t, h, p, n = 2, 32, 4, 8, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bm = jax.random.normal(ks[3], (b, t, n)) * 0.3
+    cm = jax.random.normal(ks[4], (b, t, n)) * 0.3
+    d = jnp.ones((h,))
+    want, _ = mssd.ssd_chunked(x, dt, a, bm, cm, d, chunk=8)
+    got = ops.ssd(x, dt, a, bm, cm, d, chunk=8)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=1e-4)

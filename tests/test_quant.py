@@ -1,0 +1,109 @@
+"""ASP-KAN-HAQ invariants: Alignment, PowerGap, SH-LUT, coefficient quant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grid_extension, quant, splines
+from repro.core.quant import ASPConfig
+
+
+@pytest.mark.parametrize("g", [2, 5, 7, 8, 15, 16, 30, 60, 64, 128])
+def test_eq6_constraint(g):
+    """G * 2^LD <= 2^n and LD maximal (Eq. 6)."""
+    cfg = ASPConfig(grid_size=g)
+    assert g * cfg.levels_per_interval <= 2 ** cfg.n_bits
+    assert g * cfg.levels_per_interval * 2 > 2 ** cfg.n_bits  # maximal
+
+
+def test_g_too_large_rejected():
+    with pytest.raises(ValueError):
+        ASPConfig(grid_size=512, n_bits=8)
+
+
+@given(st.integers(0, 255))
+@settings(max_examples=100, deadline=None)
+def test_powergap_decode_is_shift_mask(q):
+    cfg = ASPConfig(grid_size=5)
+    q = min(q, cfg.n_levels - 1)
+    seg, loc = quant.powergap_decode(jnp.asarray(q), cfg)
+    assert int(seg) == q // cfg.levels_per_interval
+    assert int(loc) == q % cfg.levels_per_interval
+    assert 0 <= int(seg) < cfg.grid_size
+
+
+@pytest.mark.parametrize("g", [5, 8, 64])
+def test_sh_lut_hemi_reflection(g):
+    """Hemi table + reflection reproduces the full table exactly."""
+    cfg = ASPConfig(grid_size=g)
+    full = quant.build_full_lut(cfg)
+    hemi = quant.build_sh_lut(cfg)
+    assert hemi.shape[0] == (cfg.levels_per_interval + 1) // 2
+    loc = jnp.arange(cfg.levels_per_interval)
+    rec = quant.sh_lut_lookup(hemi, loc, cfg)
+    np.testing.assert_allclose(rec, full, atol=0)
+
+
+def test_quantized_basis_partition_and_accuracy():
+    cfg = ASPConfig(grid_size=8)
+    hemi = quant.hemi_for(cfg)
+    x = jnp.linspace(-0.999, 0.999, 513)
+    qb = quant.quantized_basis(x, hemi, cfg)
+    np.testing.assert_allclose(qb.sum(-1), 1.0, atol=1e-5)
+    fb = splines.bspline_basis_uniform(x, -1, 1, 8, 3)
+    assert float(jnp.max(jnp.abs(qb - fb))) < 0.05  # quantization error only
+
+
+def test_alignment_zero_offset():
+    """Knot boundaries land exactly on quantization cell boundaries."""
+    cfg = ASPConfig(grid_size=5)
+    for s in range(cfg.grid_size):
+        knot_x = cfg.x_min + s * (cfg.x_max - cfg.x_min) / cfg.grid_size
+        q = quant.quantize_input(jnp.asarray(knot_x + 1e-6), cfg)
+        seg, loc = quant.powergap_decode(q, cfg)
+        assert int(loc) == 0 and int(seg) == s
+
+
+def test_coeff_quant_roundtrip():
+    key = jax.random.PRNGKey(0)
+    cfg = ASPConfig()
+    c = jax.random.normal(key, (8, cfg.n_basis, 16))
+    codes, scale = quant.quantize_coeffs(c, cfg, axis=(0, 1))
+    assert codes.dtype == jnp.int8
+    err = jnp.max(jnp.abs(quant.dequantize_coeffs(codes, scale) - c))
+    assert float(err) <= float(jnp.max(scale))  # <= 1 LSB
+
+
+def test_bit_slices():
+    codes = jnp.asarray([-127, -1, 0, 1, 85, 127], dtype=jnp.int8)
+    sl = quant.bit_slices(codes)
+    assert sl.shape == (6, 8)
+    mag = (sl.astype(jnp.int32) * (2 ** jnp.arange(7, -1, -1))).sum(-1)
+    np.testing.assert_array_equal(mag, jnp.abs(codes.astype(jnp.int32)))
+
+
+def test_grid_extension_preserves_function():
+    key = jax.random.PRNGKey(1)
+    old = ASPConfig(grid_size=5)
+    new = ASPConfig(grid_size=10)
+    c = jax.random.normal(key, (4, old.n_basis, 3))
+    c2 = grid_extension.extend_coeffs(c, old, new)
+    assert c2.shape == (4, new.n_basis, 3)
+    x = jnp.linspace(-0.95, 0.95, 100)
+    for j in range(4):
+        y1 = splines.bspline_basis_uniform(x, -1, 1, 5, 3) @ c[j]
+        y2 = splines.bspline_basis_uniform(x, -1, 1, 10, 3) @ c2[j]
+        np.testing.assert_allclose(y1, y2, atol=2e-3)
+
+
+def test_conventional_vs_asp_same_accuracy_class():
+    """ASP constraint costs no accuracy vs conventional misaligned PTQ."""
+    cfg = ASPConfig(grid_size=8)
+    x = jax.random.uniform(jax.random.PRNGKey(2), (4096,), minval=-1,
+                           maxval=1)
+    fb = splines.bspline_basis_uniform(x, -1, 1, 8, 3)
+    asp_err = jnp.abs(quant.quantized_basis(x, quant.hemi_for(cfg), cfg) - fb
+                      ).mean()
+    conv_err = jnp.abs(quant.conventional_quantized_basis(x, cfg) - fb).mean()
+    assert float(asp_err) < float(conv_err) * 1.5

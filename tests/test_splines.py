@@ -1,0 +1,60 @@
+"""B-spline math: Cox-de Boor oracle vs cardinal fast path + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import splines
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+@pytest.mark.parametrize("grid", [3, 5, 8])
+def test_cardinal_matches_coxdeboor(order, grid):
+    knots = splines.make_knots(-1.0, 1.0, grid, order)
+    x = jnp.linspace(-0.999, 0.999, 101)
+    ref = splines.bspline_basis(x, knots, order)
+    fast = splines.bspline_basis_uniform(x, -1.0, 1.0, grid, order)
+    np.testing.assert_allclose(ref, fast, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.floats(0.0, 0.999))
+@settings(max_examples=50, deadline=None)
+def test_partition_of_unity(order, u):
+    taps = splines.cardinal_taps(jnp.asarray(u), order)
+    assert abs(float(taps.sum()) - 1.0) < 1e-5
+    assert bool((taps >= -1e-7).all())
+
+
+@given(st.integers(1, 4), st.floats(0.0, 1.0, exclude_max=True))
+@settings(max_examples=50, deadline=None)
+def test_cardinal_symmetry(order, u):
+    """taps(1-u) == reverse(taps(u)) — basis of the SH-LUT hemi sharing."""
+    a = splines.cardinal_taps(jnp.asarray(u), order)
+    b = splines.cardinal_taps(jnp.asarray(1.0 - u), order)
+    np.testing.assert_allclose(a, b[..., ::-1], atol=1e-5)
+
+
+def test_basis_from_taps_dense():
+    grid, order = 5, 3
+    x = jnp.linspace(-0.99, 0.99, 64)
+    seg, u = splines.locate(x, -1, 1, grid)
+    taps = splines.cardinal_taps(u, order)
+    dense = splines.basis_from_taps(seg, taps, grid, order)
+    assert dense.shape == (64, grid + order)
+    # exactly K+1 nonzeros per row
+    nz = (dense > 1e-9).sum(axis=-1)
+    assert int(nz.max()) <= order + 1
+
+
+def test_lstsq_fit_recovers_spline():
+    grid, order = 6, 3
+    key = jax.random.PRNGKey(0)
+    coeffs = jax.random.normal(key, (grid + order,))
+    x = jnp.linspace(-0.98, 0.98, 400)
+    y = splines.spline_eval_reference(x, coeffs, -1, 1, grid, order)
+    fit = splines.lstsq_fit_coeffs(x, y[:, None], -1, 1, grid, order)
+    y2 = splines.spline_eval_reference(x, fit[:, 0], -1, 1, grid, order)
+    np.testing.assert_allclose(y, y2, atol=1e-4)
