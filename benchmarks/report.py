@@ -28,6 +28,8 @@ def dryrun_table():
           " arg GiB/dev | temp GiB/dev | collective ops |")
     print("|---|---|---|---|---|---|---|---|")
     for r in rows:
+        if r.get("smoke"):
+            r = dict(r, arch=f"{r['arch']} (smoke)")
         if not r.get("ok"):
             print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
                   f"{r.get('error', '')[:60]} | | | | |")

@@ -1,32 +1,66 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. The dry-run/roofline benchmarks are
-separate entry points (they need XLA_FLAGS before jax init):
+Prints ``name,us_per_call,derived`` CSV and writes a machine-readable
+``results/BENCH_kernels.json`` record (overwritten on every run; the
+checked-in copy is the latest trajectory point, and CI uploads its own
+run as a build artifact) so the perf trajectory can be tracked over PRs.
+
+The dry-run/roofline benchmarks are separate entry points (they need
+XLA_FLAGS before jax init):
   python -m repro.launch.dryrun --all [--multi-pod]
   python -m benchmarks.roofline --all
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "../results/BENCH_kernels.json")
 
 
 def main() -> None:
     from benchmarks import (bench_asp_haq, bench_input_gen, bench_kan_sam,
                             bench_kernels, bench_scale)
+    import jax
 
     print("name,us_per_call,derived")
+    rows = []
+    current = {"module": ""}
 
     def emit(name, us, derived=""):
+        rows.append({"module": current["module"], "name": name,
+                     "us_per_call": round(float(us), 1),
+                     "derived": derived})
         print(f"{name},{us:.1f},{derived}", flush=True)
 
+    ok = True
     for mod in (bench_asp_haq, bench_input_gen, bench_kan_sam, bench_scale,
                 bench_kernels):
+        current["module"] = mod.__name__
         try:
             mod.run(emit)
         except Exception as e:  # keep the harness going; report the failure
+            ok = False
             emit(f"{mod.__name__}.ERROR", 0.0, f"{type(e).__name__}:{e}")
             import traceback
             traceback.print_exc(file=sys.stderr)
+
+    record = {
+        "schema": "bench_kernels/v1",
+        "ok": ok,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {os.path.normpath(RESULTS_PATH)} ({len(rows)} rows)",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

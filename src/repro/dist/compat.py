@@ -1,0 +1,63 @@
+"""Compat shim for the jax mesh API this codebase targets (jax >= 0.5).
+
+The rest of the repo (and its test scripts) build meshes with
+
+    jax.make_mesh(shape, names, axis_types=(jax.sharding.AxisType.Auto,) * n)
+
+On older jax (< 0.5, e.g. the 0.4.37 in the CI image) ``jax.sharding`` has no
+``AxisType`` and ``jax.make_mesh`` takes no ``axis_types`` kwarg.  ``install``
+backfills both — ``AxisType`` as a plain enum and ``make_mesh`` as a wrapper
+that accepts and drops ``axis_types`` (every mesh here is Auto, which is the
+only behaviour old jax implements anyway).  On new-enough jax it is a no-op.
+
+Importing this module must never touch jax device state (the dry-run entry
+points set XLA_FLAGS before the first device query).
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def install() -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        return
+    if "axis_types" not in params:
+        _orig = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types  # Auto everywhere; old jax has nothing else
+            return _orig(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    # Compiled.cost_analysis: old jax returns [dict] (one per computation),
+    # new jax returns the dict itself — normalize to the dict.
+    compiled = jax.stages.Compiled
+    if not getattr(compiled.cost_analysis, "_repro_compat", False):
+        _cost = compiled.cost_analysis
+
+        def cost_analysis(self):
+            out = _cost(self)
+            if isinstance(out, (list, tuple)):
+                return out[0] if out else {}
+            return out
+
+        cost_analysis._repro_compat = True
+        compiled.cost_analysis = cost_analysis
+
+
+install()

@@ -1,0 +1,82 @@
+"""Int8 gradient compression with error feedback for cross-pod all-reduce.
+
+The data-parallel gradient all-reduce is the dominant cross-pod transfer in
+training (params shard over the in-pod "data" axis; pods are pure replicas).
+Wire format per leaf: chunks of ``_CHUNK`` elements share one f32 scale
+(max-abs / 127) and travel as int8 codes — 4.03 bytes/element becomes 1.03.
+What rounding drops is NOT lost: the residual stays on-device in an error-
+feedback buffer and is added to the next step's gradient before quantizing
+(Seide et al. 1-bit SGD / DGC lineage), so the bias is O(1) per run rather
+than O(steps).
+
+``psum_int8_error_feedback`` is written for ``shard_map``: codes + scales
+are ``all_gather``ed over the named axis (the only cross-device bytes),
+then dequantized and averaged locally.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_CHUNK = 1024
+
+
+def _quantize(x: Array) -> Tuple[Array, Array]:
+    """Flatten, zero-pad to a _CHUNK multiple, quantize per chunk.
+    Returns (codes int8 [n_chunks, _CHUNK], scale f32 [n_chunks])."""
+    x = x.reshape(-1).astype(jnp.float32)
+    pad = (-x.shape[0]) % _CHUNK
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    xc = x.reshape(-1, _CHUNK)
+    scale = jnp.max(jnp.abs(xc), axis=1) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(xc / safe[:, None]), -127, 127)
+    return codes.astype(jnp.int8), scale
+
+
+def _dequantize(codes: Array, scale: Array, n: int) -> Array:
+    """Inverse of ``_quantize``; returns the first ``n`` elements, flat."""
+    safe = jnp.where(scale > 0, scale, 1.0)
+    out = codes.astype(jnp.float32) * safe[:, None]
+    return out.reshape(-1)[:n]
+
+
+def compress_leaf(g: Array, ef: Array) -> Tuple[Array, Array, Array, int]:
+    """Quantize ``g`` plus the carried residual ``ef`` (flat, g.size).
+    Returns (codes, scale, new_ef, n): new_ef is exactly what this round of
+    quantization dropped and must be carried into the next call."""
+    n = g.size
+    x = g.reshape(-1).astype(jnp.float32) + ef.reshape(-1)[:n]
+    codes, scale = _quantize(x)
+    new_ef = x - _dequantize(codes, scale, n)
+    return codes, scale, new_ef, n
+
+
+def psum_int8_error_feedback(grads: Any, ef: Any, axis: str
+                             ) -> Tuple[Any, Any]:
+    """Mean-all-reduce a gradient pytree over the named mesh ``axis`` with
+    int8 wire format + error feedback.  Call under ``shard_map``.
+
+    ``ef`` mirrors ``grads`` with flat f32 residual buffers (init zeros).
+    Returns (averaged grads in the input shapes, updated residuals).
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    outs, new_efs = [], []
+    for g, e in zip(flat_g, flat_e):
+        codes, scale, new_e, n = compress_leaf(g, e)
+        all_codes = jax.lax.all_gather(codes, axis)     # [W, chunks, _CHUNK]
+        all_scale = jax.lax.all_gather(scale, axis)     # [W, chunks]
+        world = all_codes.shape[0]
+        safe = jnp.where(all_scale > 0, all_scale, 1.0)
+        total = jnp.einsum("wcq,wc->cq", all_codes.astype(jnp.float32), safe)
+        avg = total.reshape(-1)[:n] / world
+        outs.append(avg.reshape(g.shape).astype(g.dtype))
+        new_efs.append(new_e)
+    return (jax.tree.unflatten(treedef, outs),
+            jax.tree.unflatten(treedef, new_efs))

@@ -1,6 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
+                                                                ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
@@ -224,15 +226,33 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def _parse_mesh(spec: str):
+    """"4x2" -> (data=4, model=2) mesh; "2x4x2" -> (pod, data, model)."""
+    dims = tuple(int(d) for d in spec.lower().split("x"))
+    if len(dims) not in (2, 3):
+        raise SystemExit(f"--mesh {spec!r}: expected DxM (data x model) or "
+                         "PxDxM (pod x data x model)")
+    axes = ("pod", "data", "model")[-len(dims):]
+    return jax.make_mesh(dims, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+
+
 def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
-             save: bool = True) -> Dict[str, Any]:
-    arch = get_arch(arch_name)
+             save: bool = True, smoke: bool = False,
+             mesh_spec: str = "") -> Dict[str, Any]:
+    arch = get_arch(arch_name, smoke=smoke)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    if mesh_spec:
+        mesh = _parse_mesh(mesh_spec)
+        mesh_tag = mesh_spec
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
     n_dev = int(np.prod(list(dict(mesh.shape).values())))
     rec: Dict[str, Any] = {"arch": arch_name, "shape": shape_name,
                            "mesh": mesh_tag, "devices": n_dev}
+    if smoke:  # reduced config: keep these rows out of production trajectories
+        rec["smoke"] = True
     t0 = time.time()
     try:
         with mesh:
@@ -262,8 +282,9 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
                     "traceback": traceback.format_exc()[-3000:]})
     if save:
         os.makedirs(RESULTS_DIR, exist_ok=True)
+        tag = f"{mesh_tag}__smoke" if smoke else mesh_tag
         path = os.path.join(
-            RESULTS_DIR, f"{arch_name}__{shape_name}__{mesh_tag}.json")
+            RESULTS_DIR, f"{arch_name}__{shape_name}__{tag}.json")
         with open(path, "w") as f:
             json.dump(rec, f, indent=1)
     return rec
@@ -288,6 +309,12 @@ def main():
     ap.add_argument("--shape", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU CI cell)")
+    ap.add_argument("--mesh", default="",
+                    help="override mesh, e.g. 4x2 (data x model) or 2x4x2 "
+                         "(pod x data x model); pair with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     args = ap.parse_args()
 
     if args.all:
@@ -295,7 +322,8 @@ def main():
     else:
         cells = [(args.arch, args.shape)]
     for a, s in cells:
-        rec = run_cell(a, s, args.multi_pod)
+        rec = run_cell(a, s, args.multi_pod, smoke=args.smoke,
+                       mesh_spec=args.mesh)
         status = "OK" if rec.get("ok") else f"FAIL {rec.get('error')}"
         mem = rec.get("memory", {})
         per_dev = (mem.get("argument_size_in_bytes", 0)

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import compat as _compat  # noqa: F401  (jax<0.5 mesh API)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)

@@ -69,7 +69,10 @@ def test_cim_degradation_and_sam_improvement(trained):
 
     stats = cf_kan.collect_layer_stats(
         params, [jnp.asarray(b) for b in cf_synth.batches(train, 64)], cfg)
-    ccfg = cim.CIMConfig(array_size=1024, gamma0=0.06)
+    # gamma0 must push the uniform mapping's recall loss well above ranking
+    # noise (at 0.06 the degradation is ~0.2% recall — a coin flip of one or
+    # two rank swaps — while SAM's MAC-error advantage is real at any gamma).
+    ccfg = cim.CIMConfig(array_size=1024, gamma0=0.3)
 
     s_uni = cf_kan.apply_cim(params, xv, cfg, ccfg, use_sam=False)
     s_sam = cf_kan.apply_cim(params, xv, cfg, ccfg, use_sam=True, stats=stats)
@@ -78,8 +81,8 @@ def test_cim_degradation_and_sam_improvement(trained):
 
     deg_uni = max(base - r_uni, 0.0)
     deg_sam = max(base - r_sam, 0.0)
-    # CIM must hurt, SAM must hurt less
-    assert deg_uni > 0.0
+    # CIM must hurt measurably, SAM must hurt less
+    assert deg_uni > 0.01
     assert deg_sam <= deg_uni + 1e-9
 
 

@@ -1,0 +1,70 @@
+"""Sharding <-> serving seam: every logical name emitted by
+``repro.serve.decode.cache_spec`` and ``repro.models.transformer.param_spec``
+resolves through ``spec_for`` on a 2x2 (data x model) mesh to a valid
+PartitionSpec — known rule, spec shaped like the tensor, no mesh axis
+reused within a tensor.  Catches spec/param tree drift and typo'd logical
+names without compiling anything (pure eval_shape)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.dist import sharding
+from repro.dist.sharding import spec_for
+from repro.models import transformer as tfm
+from repro.serve import decode as serve_dec
+
+
+class Mesh2x2:
+    shape = {"data": 2, "model": 2}
+
+
+# one arch per family: dense, ssm, hybrid, moe, encdec(+audio), vlm
+ARCHS = ["qwen2_72b", "mamba2_1p3b", "recurrentgemma_2b", "mixtral_8x7b",
+         "whisper_base", "internvl2_76b"]
+
+
+def _assert_resolves(struct_tree, spec_tree, mesh):
+    treedef = jax.tree.structure(struct_tree)
+    leaves = jax.tree.leaves(struct_tree)
+    specs = treedef.flatten_up_to(spec_tree)
+    assert len(leaves) == len(specs) and leaves, "empty or mismatched trees"
+    for leaf, names in zip(leaves, specs):
+        assert isinstance(names, tuple), f"spec leaf {names!r} not a tuple"
+        assert len(names) == len(leaf.shape), (names, leaf.shape)
+        for n in names:
+            assert n is None or n in sharding.RULES, f"unknown logical {n!r}"
+        sp = spec_for(leaf.shape, names, mesh)
+        assert isinstance(sp, P) and len(sp) == len(leaf.shape), (names, sp)
+        used = [a for e in sp if e
+                for a in ((e,) if isinstance(e, str) else e)]
+        assert len(used) == len(set(used)), f"axis reused: {names} -> {sp}"
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_param_spec_resolves(arch_id):
+    m = get_arch(arch_id, smoke=True).model
+    params = jax.eval_shape(lambda k: tfm.init_model(k, m),
+                            jax.random.PRNGKey(0))
+    _assert_resolves(params, tfm.param_spec(m), Mesh2x2())
+
+
+@pytest.mark.parametrize("arch_id", ARCHS)
+def test_cache_spec_resolves(arch_id):
+    m = get_arch(arch_id, smoke=True).model
+    enc_len = 64 if m.family == "encdec" else 0
+    cache = jax.eval_shape(
+        lambda: serve_dec.init_cache(m, batch=4, max_len=64, enc_len=enc_len))
+    _assert_resolves(cache, serve_dec.cache_spec(m), Mesh2x2())
+
+
+def test_kv_fallback_consistent_with_cache_layout():
+    """kv_shard_mode="head_dim": when kv_heads divides the model axis it
+    claims the axis and head_dim replicates, else head_dim takes it — and
+    the cache K/V leaves agree with the activation-side rule."""
+    mesh = Mesh2x2()
+    # 3 kv heads don't divide model=2 -> head_dim picks up the axis
+    assert spec_for((4, 64, 3, 8), ("batch", "seq", "kv_heads", "head_dim"),
+                    mesh) == P("data", None, None, "model")
+    assert spec_for((4, 64, 4, 8), ("batch", "seq", "kv_heads", "head_dim"),
+                    mesh) == P("data", None, "model", None)
