@@ -1,0 +1,144 @@
+"""Continuous-batching serving benchmark -> results/BENCH_serve.json.
+
+    python -m benchmarks.bench_serve --smoke
+    python -m benchmarks.bench_serve --arch mistral_nemo_12b --arch mamba2_1p3b
+
+Runs a staggered-arrival trace through repro.serve.engine for each arch and
+records requests/s, tokens/s, and mean slot occupancy. Unlike
+BENCH_kernels.json (overwritten single record), BENCH_serve.json keeps a
+monotonically APPENDED ``history`` — one entry per run — so the serving-perf
+trajectory stays reviewable across PRs. benchmarks/records_check.py (the CI
+``records-check`` step) validates the schema, completeness (one row per
+requested arch, ``ok`` per row), smoke flags, and history monotonicity.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+import traceback
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "../results/BENCH_serve.json")
+SCHEMA = "bench_serve/v1"
+DEFAULT_ARCHS = ["mistral_nemo_12b", "mamba2_1p3b"]
+
+
+def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
+               prompt_len: int, new_tokens: int, stagger: int,
+               seed: int) -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.models import transformer as tfm
+    from repro.serve.engine import Engine, synth_trace
+
+    arch = get_arch(arch_id, smoke=smoke)
+    m = arch.model
+    params = tfm.init_model(jax.random.PRNGKey(seed), m)
+    reqs = synth_trace(
+        m.vocab, requests, max_prompt=prompt_len,
+        min_prompt=max(2, prompt_len // 2), max_new=new_tokens,
+        min_new=max(2, new_tokens // 2), stagger=stagger, seed=seed)
+    eng = Engine(params, m, n_slots=slots,
+                 max_len=prompt_len + new_tokens)
+    # warm-up run compiles prefill-per-length + the fused tick; the timed
+    # run replays the SAME trace on a fresh engine with the warm jit caches,
+    # so it measures steady-state throughput, not compile time.
+    eng.run(reqs)
+    eng2 = Engine(params, m, n_slots=slots,
+                  max_len=prompt_len + new_tokens).adopt_compiled(eng)
+    eng2.run(list(reqs))
+    rep = eng2.stats.report()
+    return {
+        "arch": arch_id, "family": m.family, "smoke": smoke, "ok": True,
+        "n_slots": slots, "requests": requests,
+        "completed": rep["completed"],
+        "requests_per_s": rep["requests_per_s"],
+        "tokens_per_s": rep["tokens_per_s"],
+        "mean_occupancy": rep["mean_occupancy"],
+        "slot_reuse": rep["slot_reuse"],
+        "ticks": rep["ticks"],
+        "evicted_eos": rep["evicted_eos"],
+        "evicted_length": rep["evicted_length"],
+    }
+
+
+def load_record(path: str) -> dict:
+    """Load the append-only record; a fresh history ONLY when the file does
+    not exist. An existing-but-unreadable record fails loudly — overwriting
+    it would silently destroy the perf trajectory records_check protects."""
+    if not os.path.exists(path):
+        return {"schema": SCHEMA, "history": []}
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except ValueError as e:
+        raise SystemExit(f"{path} exists but is not valid JSON ({e}); "
+                         "refusing to overwrite the perf history — fix or "
+                         "remove the file explicitly")
+    if rec.get("schema") != SCHEMA or not isinstance(rec.get("history"),
+                                                     list):
+        raise SystemExit(f"{path} exists with unexpected schema "
+                         f"{rec.get('schema')!r}; refusing to overwrite the "
+                         "perf history — fix or remove the file explicitly")
+    return rec
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="repeatable; default: one attn + one ssd arch")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--stagger", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    archs = args.arch or DEFAULT_ARCHS
+
+    import jax
+
+    rows, ok = [], True
+    for arch_id in archs:
+        try:
+            row = bench_arch(
+                arch_id, smoke=args.smoke, slots=args.slots,
+                requests=args.requests, prompt_len=args.prompt_len,
+                new_tokens=args.new_tokens, stagger=args.stagger,
+                seed=args.seed)
+        except Exception as e:  # recorded, not silently missing
+            ok = False
+            traceback.print_exc(file=sys.stderr)
+            row = {"arch": arch_id, "smoke": args.smoke, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+        rows.append(row)
+        print(json.dumps(row), flush=True)
+
+    record = load_record(RESULTS_PATH)
+    record["history"].append({
+        "ts": time.time(),
+        "ts_iso": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "smoke": args.smoke,
+        "ok": ok,
+        "archs": list(archs),
+        "rows": rows,
+    })
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"wrote {os.path.normpath(RESULTS_PATH)} "
+          f"({len(record['history'])} history entries)", file=sys.stderr)
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

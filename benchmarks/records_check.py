@@ -1,0 +1,179 @@
+"""Perf-record gate: validate schema + completeness of the machine-readable
+benchmark records so a malformed or silently-missing record fails CI instead
+of quietly shipping a hole in the perf trajectory.
+
+    python -m benchmarks.records_check [--results results]
+
+Checks
+------
+* ``results/BENCH_kernels.json`` — schema ``bench_kernels/v1``, ``ok`` true,
+  every expected bench module contributed rows, no ``.ERROR`` rows, sane
+  row fields.
+* ``results/BENCH_serve.json`` — schema ``bench_serve/v1``, non-empty
+  history with monotonically non-decreasing timestamps (append-only), and
+  for the latest entry: one row per requested arch (no silently-missing
+  cell), every row ``ok`` with the required metrics, and row-level ``smoke``
+  flags consistent with the entry-level flag.
+* ``results/dryrun/*.json`` — the ``smoke`` flag must agree with the
+  ``__smoke`` filename convention (report.py labels smoke records).
+
+Exit status is non-zero with a list of problems on any violation.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import List
+
+KERNELS_SCHEMA = "bench_kernels/v1"
+SERVE_SCHEMA = "bench_serve/v1"
+EXPECTED_KERNEL_MODULES = {
+    "benchmarks.bench_asp_haq", "benchmarks.bench_input_gen",
+    "benchmarks.bench_kan_sam", "benchmarks.bench_scale",
+    "benchmarks.bench_kernels",
+}
+KERNEL_ROW_KEYS = {"module", "name", "us_per_call", "derived"}
+SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
+                  "completed", "requests_per_s", "tokens_per_s",
+                  "mean_occupancy", "slot_reuse", "ticks"}
+
+
+def _load(path: str, problems: List[str]):
+    if not os.path.exists(path):
+        problems.append(f"{path}: missing")
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except ValueError as e:
+        problems.append(f"{path}: invalid JSON ({e})")
+        return None
+
+
+def check_kernels(path: str, problems: List[str]) -> None:
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    if rec.get("schema") != KERNELS_SCHEMA:
+        problems.append(f"{path}: schema {rec.get('schema')!r} != "
+                        f"{KERNELS_SCHEMA!r}")
+        return
+    if rec.get("ok") is not True:
+        problems.append(f"{path}: ok is {rec.get('ok')!r}")
+    rows = rec.get("rows") or []
+    if not rows:
+        problems.append(f"{path}: no rows")
+        return
+    seen_modules = set()
+    for i, row in enumerate(rows):
+        missing = KERNEL_ROW_KEYS - set(row)
+        if missing:
+            problems.append(f"{path}: row {i} missing keys {sorted(missing)}")
+            continue
+        seen_modules.add(row["module"])
+        if row["name"].endswith(".ERROR"):
+            problems.append(f"{path}: error row {row['name']!r}: "
+                            f"{row.get('derived')}")
+        elif not (isinstance(row["us_per_call"], (int, float))
+                  and row["us_per_call"] >= 0):
+            problems.append(f"{path}: row {row['name']!r} has bad "
+                            f"us_per_call {row['us_per_call']!r}")
+    absent = EXPECTED_KERNEL_MODULES - seen_modules
+    if absent:
+        problems.append(f"{path}: no rows from modules {sorted(absent)} "
+                        f"(silently-missing cells)")
+
+
+def check_serve(path: str, problems: List[str]) -> None:
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    if rec.get("schema") != SERVE_SCHEMA:
+        problems.append(f"{path}: schema {rec.get('schema')!r} != "
+                        f"{SERVE_SCHEMA!r}")
+        return
+    history = rec.get("history")
+    if not isinstance(history, list) or not history:
+        problems.append(f"{path}: empty or missing history")
+        return
+    last_ts = None
+    for i, entry in enumerate(history):
+        ts = entry.get("ts")
+        if not isinstance(ts, (int, float)):
+            problems.append(f"{path}: history[{i}] has no numeric ts")
+            continue
+        if last_ts is not None and ts < last_ts:
+            problems.append(f"{path}: history not monotonically appended "
+                            f"(entry {i}: ts {ts} < {last_ts})")
+        last_ts = ts
+    entry = history[-1]
+    rows = entry.get("rows") or []
+    expected = set(entry.get("archs") or [])
+    got = {row.get("arch") for row in rows}
+    if expected - got:
+        problems.append(f"{path}: latest entry missing rows for "
+                        f"{sorted(expected - got)} (silently-missing cells)")
+    for row in rows:
+        arch = row.get("arch", "?")
+        if row.get("ok") is not True:
+            problems.append(f"{path}: latest entry row {arch!r} not ok: "
+                            f"{row.get('error', 'no error recorded')}")
+            continue
+        missing = SERVE_ROW_KEYS - set(row)
+        if missing:
+            problems.append(f"{path}: latest entry row {arch!r} missing "
+                            f"keys {sorted(missing)}")
+            continue
+        if bool(row["smoke"]) != bool(entry.get("smoke")):
+            problems.append(f"{path}: row {arch!r} smoke flag "
+                            f"{row['smoke']!r} != entry flag "
+                            f"{entry.get('smoke')!r}")
+        if row["completed"] != row["requests"]:
+            problems.append(f"{path}: row {arch!r} completed "
+                            f"{row['completed']} != requests "
+                            f"{row['requests']}")
+        for k in ("requests_per_s", "tokens_per_s", "mean_occupancy"):
+            v = row[k]
+            if not (isinstance(v, (int, float)) and v > 0):
+                problems.append(f"{path}: row {arch!r} has bad {k} {v!r}")
+
+
+def check_dryrun(dirpath: str, problems: List[str]) -> None:
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        rec = _load(path, problems)
+        if rec is None:
+            continue
+        smoke_name = os.path.basename(path).endswith("__smoke.json")
+        smoke_flag = bool(rec.get("smoke"))
+        if smoke_name != smoke_flag:
+            problems.append(f"{path}: smoke flag {smoke_flag} does not match "
+                            f"__smoke filename convention")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(
+        os.path.dirname(__file__), "../results"))
+    args = ap.parse_args(argv)
+    root = os.path.normpath(args.results)
+
+    problems: List[str] = []
+    check_kernels(os.path.join(root, "BENCH_kernels.json"), problems)
+    check_serve(os.path.join(root, "BENCH_serve.json"), problems)
+    check_dryrun(os.path.join(root, "dryrun"), problems)
+
+    if problems:
+        print(f"records-check FAILED ({len(problems)} problems):",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        raise SystemExit(1)
+    print(f"records-check OK: {root}/BENCH_kernels.json, "
+          f"{root}/BENCH_serve.json, {root}/dryrun/*.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,18 +1,28 @@
-"""Serving launcher: batched prefill + decode loop.
+"""Serving launcher: thin driver over the continuous-batching engine.
 
     python -m repro.launch.serve --arch mamba2_1p3b --smoke --requests 8
 
-Demonstrates the production serving path (prefill builds caches, decode
-steps are jitted once and reused; rolling caches for SWA/local archs)."""
+The engine itself (slot pool, admission queue, prefill-on-admit, fused
+multi-slot decode, eviction) lives in ``repro.serve.engine``; this driver
+only builds params, synthesizes a staggered-arrival trace, optionally enters
+a host mesh (``--mesh-model N`` shards the slot pool via dist.sharding), runs
+the engine, and prints the EngineStats report.
+
+``--check`` is the CI smoke gate: it plants an EOS on request 0 (probed from
+a solo run so the request genuinely stops early), then asserts slot reuse
+(>1 request served by some slot), at least one EOS eviction, and that every
+request completed. Exit status is non-zero on any violation.
+"""
 import argparse
-import time
+import contextlib
+import json
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.models import transformer as tfm
-from repro.serve import decode as dec
+from repro.serve.engine import Engine, synth_trace
+from repro.serve.scheduler import AdmissionQueue, Request
 
 
 def main(argv=None):
@@ -20,41 +30,86 @@ def main(argv=None):
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length in the synthetic trace")
+    ap.add_argument("--new-tokens", type=int, default=32,
+                    help="max per-request generation budget")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="ticks between request arrivals")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bounded admission queue (0 = unbounded)")
+    ap.add_argument("--mesh-model", type=int, default=0,
+                    help="enter a (data x model) host mesh with this many "
+                         "model ways (0 = no mesh)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: assert slot reuse + EOS eviction + "
+                         "full completion")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
     m = arch.model
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = tfm.init_model(key, m)
 
-    b, s = args.requests, args.prompt_len
-    max_len = s + args.new_tokens
-    prompts = jax.random.randint(key, (b, s), 0, m.vocab)
+    reqs = synth_trace(
+        m.vocab, args.requests,
+        max_prompt=args.prompt_len, min_prompt=max(2, args.prompt_len // 2),
+        max_new=args.new_tokens, min_new=max(2, args.new_tokens // 2),
+        stagger=args.stagger, seed=args.seed)
+    max_len = args.prompt_len + args.new_tokens
 
-    t0 = time.perf_counter()
-    logits, cache = dec.prefill(params, m, {"tokens": prompts},
-                                max_len=max_len, last_only=True)
-    tok = jnp.argmax(logits, axis=-1)
-    t_prefill = time.perf_counter() - t0
+    mesh_ctx = contextlib.nullcontext()
+    if args.mesh_model:
+        from repro.launch.mesh import make_host_mesh
+        mesh_ctx = make_host_mesh(model=args.mesh_model)
 
-    step = jax.jit(lambda c, t, i: dec.decode_step(params, c, t, i, m))
-    t0 = time.perf_counter()
-    out = [tok]
-    for i in range(args.new_tokens - 1):
-        logits, cache = step(cache, tok, jnp.asarray(s + i))
-        tok = jnp.argmax(logits[:, -1:, :], axis=-1)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    with mesh_ctx:
+        queue = AdmissionQueue(args.queue_cap or None)
+        eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
+                     queue=queue)
+        eos_planted = args.check and args.new_tokens >= 3
+        if eos_planted:
+            # plant a genuine early stop: request 0's EOS is its own 2nd
+            # token. Probe through an IDENTICAL engine (same mesh, same slot
+            # count => same fused-tick shapes): under a mesh the partitioned
+            # reduction order depends on the batch shape, so a B=1 generate()
+            # probe can argmax-diverge from the pooled decode on a random-
+            # init model whose logits are nearly flat.
+            probe_eng = Engine(params, m, n_slots=args.slots,
+                               max_len=max_len)
+            probe = probe_eng.run([Request(rid="probe",
+                                           tokens=reqs[0].tokens,
+                                           max_new=2)])
+            reqs[0].eos_id = int(probe[0].tokens[1])
+            # the probe compiled the same prefill length + tick: reuse them
+            eng.adopt_compiled(probe_eng)
+        comps = eng.run(reqs)
 
-    toks = jnp.concatenate(out, axis=1)
-    per_tok = t_decode / max(args.new_tokens - 1, 1) * 1e3
-    print(f"arch={m.name} batch={b} prompt={s} new={args.new_tokens}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms; decode: {per_tok:.2f} ms/token "
-          f"({b / (per_tok / 1e3):.0f} tok/s aggregate)")
-    print("sample:", toks[0, :16].tolist())
+    rep = eng.stats.report()
+    print(f"arch={m.name} slots={args.slots} requests={args.requests} "
+          f"stagger={args.stagger} mesh_model={args.mesh_model or 'none'}")
+    print(json.dumps(rep, indent=1))
+    for c in comps[:4]:
+        print(f"  rid={c.rid} reason={c.reason} slot={c.slot} "
+              f"ticks={c.admitted_tick}->{c.finished_tick} "
+              f"tokens={list(c.tokens)[:8]}")
+
+    if args.check:
+        problems = []
+        if rep["completed"] != args.requests:
+            problems.append(f"completed {rep['completed']} != "
+                            f"{args.requests} submitted")
+        if rep["slot_reuse"] <= 1:
+            problems.append(f"no slot reuse: slot_served={rep['slot_served']}")
+        if eos_planted and rep["evicted_eos"] < 1:
+            problems.append("no EOS eviction observed")
+        if rep["evicted_eos"] + rep["evicted_length"] != rep["completed"]:
+            problems.append("eviction accounting does not add up")
+        if problems:
+            raise SystemExit("engine check FAILED: " + "; ".join(problems))
+        print("engine check OK: slot reuse, EOS eviction, full completion")
 
 
 if __name__ == "__main__":

@@ -138,9 +138,10 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     """One-token decode. q: [B, 1, Hq, hd]; caches: [B, T, Kv, hd].
 
     ``cache_index`` = number of valid tokens already in the cache INCLUDING
-    the current one. For rolling (windowed) caches, every slot < min(index, T)
-    is valid — softmax is permutation-invariant over KV so slot order does
-    not matter.
+    the current one — a scalar (whole batch at one position) or a [B] vector
+    (continuous batching: every slot carries its own token count). For
+    rolling (windowed) caches, every slot < min(index, T) is valid — softmax
+    is permutation-invariant over KV so slot order does not matter.
     """
     b, _, hq, hd = q.shape
     t, n_kv = k_cache.shape[1], k_cache.shape[2]
@@ -148,9 +149,12 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     scores = jnp.einsum("bskgd,btkd->bskgt", qg,
                         k_cache.astype(jnp.float32))
     pos = jnp.arange(t)
-    limit = jnp.minimum(cache_index, t) if rolling else cache_index
-    mask = pos < limit                                 # [T], scalar index
-    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+    limit = jnp.asarray(cache_index)
+    if rolling:
+        limit = jnp.minimum(limit, t)
+    limit = jnp.broadcast_to(limit, (b,))
+    mask = pos[None, :] < limit[:, None]               # [B, T]
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bskgt,btkd->bskgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, 1, hq, hd).astype(q.dtype)
@@ -159,11 +163,22 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
 def cache_update(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
                  index: Array, *, rolling: bool = False
                  ) -> Tuple[Array, Array]:
-    """Insert one token's K/V at ``index`` (mod T for rolling caches)."""
+    """Insert one token's K/V at ``index`` (mod T for rolling caches).
+
+    ``index`` is a scalar (whole batch writes one position) or a [B] vector
+    (per-row positions — the continuous-batching engine's decode tick, where
+    each slot sits at its own sequence offset)."""
     t = k_cache.shape[1]
+    index = jnp.asarray(index)
     slot = jnp.mod(index, t) if rolling else index
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    k_new = k_new.astype(k_cache.dtype)
+    v_new = v_new.astype(v_cache.dtype)
+    if slot.ndim:                       # per-row scatter, vmapped over batch
+        upd = jax.vmap(lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(
+            c, n, s, axis=0))
+        return upd(k_cache, k_new, slot), upd(v_cache, v_new, slot)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot,
+                                                  axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot,
+                                                  axis=1)
     return k_cache, v_cache

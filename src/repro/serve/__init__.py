@@ -1,0 +1,6 @@
+"""Serving: single-shot prefill/decode primitives (``repro.serve.decode``)
+and the continuous-batching engine built on them (``repro.serve.engine`` +
+``repro.serve.scheduler``)."""
+from repro.serve.engine import Engine, generate_dynamic, synth_trace  # noqa: F401
+from repro.serve.scheduler import (AdmissionQueue, Completion,  # noqa: F401
+                                   EngineStats, Request)

@@ -121,13 +121,14 @@ def _qkv(p, xn, cfg: ModelConfig, which: str = "attn"):
 
 def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
                   index: Array):
-    """x: [B, 1, D]; index: scalar count of tokens so far (0-based pos)."""
+    """x: [B, 1, D]; index: count of tokens so far (0-based position of the
+    token being decoded) — scalar, or [B] for per-slot continuous batching."""
     new_cache = dict(cache)
     if spec.mixer in ("attn", "swa", "local"):
         xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
         q, k, v = _qkv(p, xn, cfg)
         if cfg.rope_theta:
-            pos = jnp.full((1,), index)
+            pos = index[:, None] if index.ndim else jnp.full((1,), index)
             q = layers.apply_rope(q, pos, cfg.rope_theta)
             k = layers.apply_rope(k, pos, cfg.rope_theta)
         rolling = spec.mixer in ("swa", "local")
@@ -175,11 +176,21 @@ def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
 
 def decode_step(params, cache, tokens: Array, index: Array,
                 cfg: ModelConfig) -> Tuple[Array, list]:
-    """One decode step. tokens: [B, 1] -> (logits [B, 1, V], new cache)."""
+    """One decode step. tokens: [B, 1] -> (logits [B, 1, V], new cache).
+
+    ``index`` is the 0-based position of the incoming token: a scalar when
+    the whole batch decodes in lockstep (classic static batching), or a [B]
+    vector when every row sits at its own offset (the continuous-batching
+    engine's fused multi-slot tick — see repro.serve.engine)."""
+    index = jnp.asarray(index)
     x = layers.embed_lookup(params["embed"], tokens).astype(cfg.dtype)
     if cfg.family == "encdec":
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["dec_pos"], index, 1, axis=0).astype(cfg.dtype)[None]
+        if index.ndim:
+            pe = jnp.take(params["dec_pos"], index, axis=0)[:, None]
+        else:
+            pe = jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"], index, 1, axis=0)[None]
+        x = x + pe.astype(cfg.dtype)
     stages = tfm.stages_for(cfg)
     new_caches = []
     for st_params, st_cache, stage in zip(params["stages"], cache, stages):
@@ -370,12 +381,29 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, Array],
 
 def generate(params, cfg: ModelConfig, prompt: Array, n_new: int,
              max_len: Optional[int] = None) -> Array:
-    """Greedy generation (functional loop, used by examples/tests)."""
+    """Greedy generation (functional loop, used by examples/tests).
+
+    Contract (pinned): returns exactly ``n_new`` tokens per request. Token 0
+    is the argmax over the prefill logits at the last prompt position, so
+    ``n_new=1`` runs zero decode steps and the scan below never executes.
+
+    ``prompt`` is either a rectangular [B, S] array (static batch, lockstep
+    decode) or a list/tuple of 1-D token arrays with heterogeneous lengths —
+    the dynamic-batch case, which routes through the continuous-batching
+    engine (repro.serve.engine) and still returns [len(prompt), n_new].
+    """
+    if n_new < 1:
+        raise ValueError(f"n_new must be >= 1, got {n_new}")
+    if isinstance(prompt, (list, tuple)):
+        from repro.serve import engine as engine_lib
+        return engine_lib.generate_dynamic(params, cfg, prompt, n_new,
+                                           max_len=max_len)
     b, s = prompt.shape
     max_len = max_len or (s + n_new)
     logits, cache = prefill(params, cfg, {"tokens": prompt}, max_len)
     tok = jnp.argmax(logits[:, -1:], axis=-1)
-    out = [tok]
+    if n_new == 1:
+        return tok
 
     def step(carry, i):
         tok, cache = carry
@@ -385,4 +413,4 @@ def generate(params, cfg: ModelConfig, prompt: Array, n_new: int,
 
     (_, _), toks = jax.lax.scan(step, (tok, cache), jnp.arange(n_new - 1))
     rest = jnp.swapaxes(toks[..., 0], 0, 1)
-    return jnp.concatenate([out[0], rest], axis=1)
+    return jnp.concatenate([tok, rest], axis=1)

@@ -1,0 +1,344 @@
+"""Continuous-batching serving engine: a fixed pool of decode slots fed by
+an admission queue, so requests join and leave a *running* batch instead of
+waiting for the slowest sequence in a static batch.
+
+Design
+------
+* **Slot pool** — one shared cache pytree ``init_cache(cfg, n_slots,
+  max_len)``. Under an active mesh the pool is laid out with
+  ``dist.sharding.tree_shardings`` over ``cache_spec(cfg)`` (batch on the
+  data axes, kv_heads/head_dim on 'model'), so the engine inherits the same
+  sharding rules as training/dry-run.
+* **Prefill-on-admit** — a newly admitted request prefills *alone* (B=1 at
+  its exact prompt length; one compile per distinct length) against the
+  pool's ``max_len`` so its cache leaves are shape-compatible with the pool,
+  then its rows are written into the free slot with
+  ``jax.lax.dynamic_update_slice_in_dim`` under a donated jit — XLA updates
+  the pool in place, no reallocation.
+* **Fused multi-slot decode** — every tick runs ONE ``decode_step`` over all
+  N slots with a per-slot index vector (see repro.serve.decode); slots at
+  different sequence offsets decode in the same kernel launch. Inactive
+  slots compute garbage that is never read: their host-side state is frozen
+  and their cache rows are fully rewritten at the next admission.
+* **Eviction** — a slot frees on EOS or when the request's ``max_new``
+  budget is spent; the next queued request is admitted on the same tick.
+
+Exactness
+---------
+Per-request outputs are independent of co-resident slots for every
+batch-independent layer family (attn/swa/local, ssd, rglru, cross-attn,
+mlp/kan FFN) — tests/test_engine.py pins this batching invariance against
+solo runs. The one exception is MoE capacity routing: GShard token dropping
+couples tokens across the batch, so MoE archs match solo runs only when
+capacity is not binding (raise ``capacity_factor`` for serving).
+
+Decoding is greedy (argmax), matching ``serve.decode.generate``.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import sharding as shlib
+from repro.models import transformer as tfm
+from repro.models.transformer import ModelConfig
+from repro.serve import decode as dec
+from repro.serve.scheduler import (AdmissionQueue, Completion, EngineStats,
+                                   Request)
+
+
+# The jitted kernels are module-level pure functions (parameterized via
+# functools.partial on hashable config, never on the Engine instance): a
+# bound-method closure would keep the defining engine — and its whole slot
+# pool — alive inside any callable shared through ``adopt_compiled``.
+
+def _decode_fn(params, cache, tokens, index, *, cfg):
+    """Fused tick: [N] last tokens + [N] per-slot indices -> next tokens."""
+    logits, cache = dec.decode_step(params, cache, tokens[:, None], index,
+                                    cfg)
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+
+
+def _write_fn(pool, solo, slot, *, stages):
+    """Write a B=1 prefill cache into pool row ``slot`` (pool donated)."""
+    out = []
+    for pool_blk, solo_blk, stage in zip(pool, solo, stages):
+        ax = 1 if stage.repeats > 1 else 0
+        out.append(jax.tree.map(
+            lambda p, s, ax=ax: jax.lax.dynamic_update_slice_in_dim(
+                p, s.astype(p.dtype), slot, axis=ax),
+            pool_blk, solo_blk))
+    return out
+
+
+def _prefill_fn(params, batch, *, cfg, max_len):
+    logits, cache = dec.prefill(params, cfg, batch, max_len=max_len,
+                                last_only=True)
+    return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
+
+
+class Engine:
+    """Continuous-batching engine over a fixed slot pool.
+
+    Parameters
+    ----------
+    params, cfg : model weights + ModelConfig (any supported family).
+    n_slots     : decode-slot pool size (the fused tick's batch dimension).
+    max_len     : per-slot cache capacity; a request needs
+                  ``len(prompt) + max_new - 1 <= max_len`` (the final
+                  generated token never enters the cache).
+    queue       : optional AdmissionQueue (bounded => backpressure).
+    eos_id      : engine-wide EOS (per-request ``Request.eos_id`` overrides).
+    enc_len     : enc-dec only — encoder length shared by all requests.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
+                 max_len: int, queue: Optional[AdmissionQueue] = None,
+                 eos_id: Optional[int] = None, enc_len: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.enc_len = enc_len
+        self.queue = queue if queue is not None else AdmissionQueue()
+        self.eos_id = eos_id
+        self.stages = tfm.stages_for(cfg)
+        self.mesh = shlib.current_mesh()
+
+        self.cache = dec.init_cache(cfg, n_slots, max_len, enc_len)
+        if self.mesh is not None:
+            shardings = shlib.tree_shardings(self.mesh, self.cache,
+                                             dec.cache_spec(cfg))
+            self.cache = jax.device_put(self.cache, shardings)
+
+        # host-side per-slot state
+        self.active = np.zeros(n_slots, dtype=bool)
+        self.index = np.zeros(n_slots, dtype=np.int64)   # tokens in cache
+        self.last_tok = np.zeros(n_slots, dtype=np.int64)
+        self.remaining = np.zeros(n_slots, dtype=np.int64)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_tokens: List[List[int]] = [[] for _ in range(n_slots)]
+        self.slot_admitted = np.zeros(n_slots, dtype=np.int64)
+
+        self.tick_no = 0
+        self.stats = EngineStats(n_slots=n_slots)
+        self._prefill_jit: Dict[Tuple[int, int], object] = {}
+        self._decode_jit = jax.jit(
+            functools.partial(_decode_fn, cfg=cfg), donate_argnums=1)
+        self._write_jit = jax.jit(
+            functools.partial(_write_fn, stages=tuple(self.stages)),
+            donate_argnums=0)
+
+    def _prefill_for(self, prompt_len: int, enc_len: int):
+        key = (prompt_len, enc_len)
+        if key not in self._prefill_jit:
+            self._prefill_jit[key] = jax.jit(functools.partial(
+                _prefill_fn, cfg=self.cfg, max_len=self.max_len))
+        return self._prefill_jit[key]
+
+    # -- admission / eviction ----------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request. False = backpressure (bounded queue full).
+        Raises ValueError for requests that can never fit the slot cache."""
+        s = int(np.asarray(req.tokens).shape[-1])
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid!r}: max_new must be >= 1")
+        if s + req.max_new - 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid!r}: prompt {s} + max_new {req.max_new} - 1 "
+                f"exceeds slot capacity max_len={self.max_len}")
+        if req.frames is not None:
+            f = int(np.asarray(req.frames).shape[-2])
+            if f != self.enc_len:
+                # a shorter update would silently write only f of enc_len
+                # pool rows, and cross-attn reads the full width — zero (or
+                # a previous occupant's) encoder K/V would leak into softmax
+                raise ValueError(
+                    f"request {req.rid!r}: frames length {f} != engine "
+                    f"enc_len {self.enc_len}")
+        elif self.enc_len:
+            raise ValueError(f"request {req.rid!r}: engine was built with "
+                             f"enc_len={self.enc_len} but request has no "
+                             "frames")
+        ok = self.queue.submit(req)
+        if not ok:
+            self.stats.rejected += 1
+        return ok
+
+    def _eos_for(self, req: Request) -> Optional[int]:
+        return req.eos_id if req.eos_id is not None else self.eos_id
+
+    def _admit(self, slot: int, req: Request) -> List[Completion]:
+        toks = jnp.asarray(np.asarray(req.tokens))[None, :]
+        batch = {"tokens": toks}
+        enc_len = 0
+        if req.frames is not None:
+            frames = jnp.asarray(np.asarray(req.frames))[None]
+            batch["frames"] = frames
+            enc_len = frames.shape[1]
+        tok0, solo = self._prefill_for(toks.shape[1], enc_len)(
+            self.params, batch)
+        self.cache = self._write_jit(self.cache, solo,
+                                     jnp.asarray(slot, jnp.int32))
+        tok0 = int(np.asarray(tok0)[0])
+        self.active[slot] = True
+        self.index[slot] = toks.shape[1]
+        self.last_tok[slot] = tok0
+        self.remaining[slot] = req.max_new - 1
+        self.slot_req[slot] = req
+        self.slot_tokens[slot] = [tok0]
+        self.slot_admitted[slot] = self.tick_no
+        self.stats.prefills += 1
+        self.stats.slot_served[slot] += 1
+        # the prefill token may already satisfy a stop condition
+        eos = self._eos_for(req)
+        if eos is not None and tok0 == eos:
+            return [self._evict(slot, "eos")]
+        if self.remaining[slot] <= 0:
+            return [self._evict(slot, "length")]
+        return []
+
+    def _evict(self, slot: int, reason: str) -> Completion:
+        req = self.slot_req[slot]
+        comp = Completion(
+            rid=req.rid, tokens=np.asarray(self.slot_tokens[slot]),
+            reason=reason, slot=slot,
+            admitted_tick=int(self.slot_admitted[slot]),
+            finished_tick=self.tick_no)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.slot_tokens[slot] = []
+        self.stats.completed += 1
+        if reason == "eos":
+            self.stats.evicted_eos += 1
+        else:
+            self.stats.evicted_length += 1
+        return comp
+
+    # -- the tick -----------------------------------------------------------
+
+    def step(self) -> List[Completion]:
+        """One engine tick: admit whatever fits, then one fused decode over
+        every slot. Returns the requests completed during this tick."""
+        done: List[Completion] = []
+        while not self.active.all():
+            req = self.queue.pop(self.tick_no)
+            if req is None:
+                break
+            slot = int(np.flatnonzero(~self.active)[0])
+            done += self._admit(slot, req)
+
+        if self.active.any():
+            # inactive slots still flow through the fused step (static batch
+            # shape); index 0 keeps their garbage writes in-bounds, and their
+            # rows are fully rewritten at the next admission.
+            tokens = jnp.asarray(np.where(self.active, self.last_tok, 0)
+                                 .astype(np.int32))
+            index = jnp.asarray(np.where(self.active, self.index, 0)
+                                .astype(np.int32))
+            nxt, self.cache = self._decode_jit(self.params, self.cache,
+                                               tokens, index)
+            nxt = np.asarray(nxt)
+            n_active = int(self.active.sum())
+            self.stats.occupancy_ticks += n_active
+            self.stats.decode_tokens += n_active
+            for slot in np.flatnonzero(self.active):
+                slot = int(slot)
+                tok = int(nxt[slot])
+                self.slot_tokens[slot].append(tok)
+                self.index[slot] += 1
+                self.last_tok[slot] = tok
+                self.remaining[slot] -= 1
+                eos = self._eos_for(self.slot_req[slot])
+                if eos is not None and tok == eos:
+                    done.append(self._evict(slot, "eos"))
+                elif self.remaining[slot] <= 0:
+                    done.append(self._evict(slot, "length"))
+        else:
+            self.stats.idle_ticks += 1
+        self.tick_no += 1
+        self.stats.ticks += 1
+        return done
+
+    def adopt_compiled(self, other: "Engine") -> "Engine":
+        """Reuse another engine's compiled prefill/tick/write callables —
+        warm starts for probe/benchmark engines with identical cfg, slot
+        count, and max_len (the jit caches key on those shapes)."""
+        if (other.cfg, other.n_slots, other.max_len) != (
+                self.cfg, self.n_slots, self.max_len):
+            raise ValueError("adopt_compiled: engines differ in "
+                             "cfg/n_slots/max_len")
+        self._prefill_jit = other._prefill_jit
+        self._decode_jit = other._decode_jit
+        self._write_jit = other._write_jit
+        return self
+
+    def run(self, requests: Sequence[Request] = (),
+            max_ticks: int = 1_000_000) -> List[Completion]:
+        """Submit ``requests`` then tick until the queue drains and every
+        slot is free. Idle ticks advance time toward future arrivals. When
+        the admission queue is bounded, ``run`` itself absorbs the
+        backpressure: requests the queue refuses are held back and
+        resubmitted as it drains, so nothing is silently dropped."""
+        pending = list(requests)
+        t0 = time.perf_counter()
+        out: List[Completion] = []
+        while pending or self.active.any() or len(self.queue):
+            while pending and (self.queue.max_pending is None
+                               or len(self.queue) < self.queue.max_pending):
+                self.submit(pending.pop(0))
+            if self.stats.ticks >= max_ticks:
+                raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
+            out.extend(self.step())
+        self.stats.wall_s += time.perf_counter() - t0
+        return out
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def synth_trace(vocab: int, n_requests: int, *, max_prompt: int = 12,
+                min_prompt: int = 4, max_new: int = 8, min_new: int = 3,
+                stagger: int = 2, n_priorities: int = 2,
+                seed: int = 0) -> List[Request]:
+    """Staggered-arrival synthetic trace: request i arrives at tick
+    ``i * stagger`` with a random prompt length/budget and a cycling
+    priority class — the canonical input for the driver, the benchmark, and
+    the batching-invariance tests."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n_requests):
+        s = int(rng.randint(min_prompt, max_prompt + 1))
+        reqs.append(Request(
+            rid=i,
+            tokens=rng.randint(0, vocab, size=(s,)).astype(np.int32),
+            max_new=int(rng.randint(min_new, max_new + 1)),
+            priority=i % n_priorities,
+            arrival=i * stagger))
+    return reqs
+
+
+def generate_dynamic(params, cfg: ModelConfig, prompts: Sequence,
+                     n_new: int, max_len: Optional[int] = None,
+                     n_slots: Optional[int] = None) -> jax.Array:
+    """Ragged-batch greedy generation via the engine: ``prompts`` is a list
+    of 1-D token arrays with heterogeneous lengths. Returns [B, n_new]
+    (every request generates exactly ``n_new`` tokens; no EOS)."""
+    lens = [int(np.asarray(p).shape[-1]) for p in prompts]
+    max_len = max_len or (max(lens) + n_new)
+    n_slots = n_slots or min(len(prompts), 4)
+    eng = Engine(params, cfg, n_slots=n_slots, max_len=max_len)
+    reqs = [Request(rid=i, tokens=p, max_new=n_new)
+            for i, p in enumerate(prompts)]
+    comps = eng.run(reqs)
+    out = np.zeros((len(prompts), n_new), dtype=np.int64)
+    for c in comps:
+        out[c.rid] = c.tokens
+    return jnp.asarray(out)

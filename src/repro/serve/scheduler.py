@@ -1,0 +1,138 @@
+"""Admission scheduling + accounting for the continuous-batching engine.
+
+The engine (repro.serve.engine) owns a fixed pool of decode slots; this
+module owns everything that happens before a request reaches a slot and the
+bookkeeping of what happened afterwards:
+
+* ``Request``      — one serving request (prompt tokens, budget, priority,
+                     arrival tick, optional per-request EOS).
+* ``AdmissionQueue`` — bounded FIFO-with-priority queue. Higher ``priority``
+                     admits first; FIFO order breaks ties within a priority
+                     class; ``submit`` returns False when the queue is full
+                     (backpressure — callers must retry or shed load).
+* ``Completion``   — the finished request: generated tokens + why it stopped.
+* ``EngineStats``  — throughput/occupancy counters; ``report()`` is the
+                     machine-readable record benchmarks/bench_serve.py ships
+                     to results/BENCH_serve.json.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``arrival`` is the earliest engine tick at which
+    the request may be admitted (staggered-arrival traces); ``priority``
+    orders admission (higher first, FIFO within a class)."""
+    rid: Any
+    tokens: Any                       # 1-D int prompt
+    max_new: int                      # total tokens to generate (incl. the
+    #                                   token produced by prefill)
+    priority: int = 0
+    arrival: int = 0
+    eos_id: Optional[int] = None
+    frames: Any = None                # enc-dec only: encoder features [S, D]
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: Any
+    tokens: np.ndarray                # [n_generated]
+    reason: str                       # "eos" | "length"
+    slot: int
+    admitted_tick: int
+    finished_tick: int
+
+
+class AdmissionQueue:
+    """Bounded priority queue: higher ``Request.priority`` pops first, FIFO
+    within a priority class, and only requests whose ``arrival`` tick has
+    passed are eligible. ``submit`` returns False when ``max_pending`` is
+    reached — the engine surfaces that as backpressure, never silent drops."""
+
+    def __init__(self, max_pending: Optional[int] = None):
+        self.max_pending = max_pending
+        self._items: List[Tuple[Tuple[int, int], Request]] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def submit(self, req: Request) -> bool:
+        if self.max_pending is not None and len(self._items) >= self.max_pending:
+            return False
+        self._items.append(((-req.priority, next(self._seq)), req))
+        return True
+
+    def pop(self, tick: int) -> Optional[Request]:
+        """Highest-priority (FIFO-within-class) request with arrival <= tick."""
+        ready = [it for it in self._items if it[1].arrival <= tick]
+        if not ready:
+            return None
+        item = min(ready, key=lambda it: it[0])
+        self._items.remove(item)
+        return item[1]
+
+    def next_arrival(self) -> Optional[int]:
+        """Earliest arrival tick among pending requests (None when empty)."""
+        return min((it[1].arrival for it in self._items), default=None)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Throughput/occupancy accounting. ``occupancy_ticks`` sums the number
+    of active slots over decode ticks, so mean occupancy = occupancy_ticks /
+    (decode_ticks * n_slots); ``slot_served[i]`` counts requests admitted to
+    slot i — any value > 1 proves slot reuse (eviction + readmission)."""
+    n_slots: int
+    ticks: int = 0                    # total ticks (decode + idle)
+    idle_ticks: int = 0               # ticks with no active slot
+    prefills: int = 0
+    decode_tokens: int = 0
+    completed: int = 0
+    evicted_eos: int = 0
+    evicted_length: int = 0
+    rejected: int = 0                 # backpressure / over-length rejections
+    occupancy_ticks: int = 0
+    slot_served: List[int] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+
+    def __post_init__(self):
+        if not self.slot_served:
+            self.slot_served = [0] * self.n_slots
+
+    @property
+    def decode_ticks(self) -> int:
+        return self.ticks - self.idle_ticks
+
+    def mean_occupancy(self) -> float:
+        busy = max(self.decode_ticks, 1)
+        return self.occupancy_ticks / (busy * self.n_slots)
+
+    def report(self) -> dict:
+        wall = self.wall_s or float("nan")
+        return {
+            "n_slots": self.n_slots,
+            "ticks": self.ticks,
+            "idle_ticks": self.idle_ticks,
+            "prefills": self.prefills,
+            "decode_tokens": self.decode_tokens,
+            "completed": self.completed,
+            "evicted_eos": self.evicted_eos,
+            "evicted_length": self.evicted_length,
+            "rejected": self.rejected,
+            "mean_occupancy": round(self.mean_occupancy(), 4),
+            "slot_served": list(self.slot_served),
+            "slot_reuse": max(self.slot_served, default=0),
+            "wall_s": round(self.wall_s, 4),
+            "requests_per_s": round(self.completed / wall, 3)
+            if self.wall_s else None,
+            "tokens_per_s": round(
+                (self.decode_tokens + self.prefills) / wall, 2)
+            if self.wall_s else None,
+        }

@@ -70,6 +70,48 @@ def test_generate_greedy_runs():
     assert bool((out >= 0).all()) and bool((out < m.vocab).all())
 
 
+def test_generate_n_new_1_contract():
+    """Pinned contract: generate returns exactly n_new tokens; token 0 is
+    the argmax over the prefill logits at the last prompt position, so
+    n_new=1 runs zero decode steps. n_new < 1 is an error, not a silent
+    empty result."""
+    m = get_arch("mamba2_1p3b", smoke=True).model
+    key = jax.random.PRNGKey(4)
+    params = tfm.init_model(key, m)
+    prompt = jax.random.randint(key, (B, 8), 0, m.vocab)
+    out1 = dec.generate(params, m, prompt, n_new=1)
+    assert out1.shape == (B, 1)
+    logits, _ = dec.prefill(params, m, {"tokens": prompt}, max_len=9,
+                            last_only=True)
+    assert (out1[:, 0] == jnp.argmax(logits[:, -1], axis=-1)).all()
+    # and the n_new=1 prefix agrees with a longer generation
+    out3 = dec.generate(params, m, prompt, n_new=3)
+    assert out3.shape == (B, 3)
+    assert (out3[:, :1] == out1).all()
+    with pytest.raises(ValueError, match="n_new"):
+        dec.generate(params, m, prompt, n_new=0)
+
+
+@pytest.mark.parametrize("arch_id", ["mistral_nemo_12b", "mamba2_1p3b",
+                                     "recurrentgemma_2b"])
+def test_decode_step_vector_index_matches_scalar(arch_id):
+    """The continuous-batching tick passes a per-slot [B] index vector; with
+    all rows at the same position it must be bitwise-identical to the scalar
+    path (logits AND every cache leaf)."""
+    m = get_arch(arch_id, smoke=True).model
+    key = jax.random.PRNGKey(5)
+    params = tfm.init_model(key, m)
+    toks = jax.random.randint(key, (B, S), 0, m.vocab)
+    _, cache = dec.prefill(params, m, {"tokens": toks[:, :S - 2]}, max_len=S)
+    ls, cs = dec.decode_step(params, cache, toks[:, S - 2:S - 1], S - 2, m)
+    lv, cv = dec.decode_step(params, cache, toks[:, S - 2:S - 1],
+                             jnp.full((B,), S - 2), m)
+    assert float(jnp.max(jnp.abs(ls - lv))) == 0.0
+    for a, b in zip(jax.tree.leaves(cs), jax.tree.leaves(cv)):
+        assert float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32)))) == 0.0
+
+
 def test_rolling_cache_consistency_beyond_window():
     """SWA decode far past the window must equal teacher-forced forward."""
     import dataclasses
