@@ -19,12 +19,17 @@ def _time(fn, *args, n=20):
 
 
 def run(emit):
+    from repro.core import kan
     from repro.hw import cost_model
     key = jax.random.PRNGKey(0)
     x = jax.random.uniform(key, (4096, 64), minval=-1, maxval=1)
     for g in (8, 16, 32, 64):
         cfg = ASPConfig(grid_size=g)
-        hemi = quant.hemi_for(cfg)
+        # the SH-LUT comes from a deployed artifact (the one-shot program
+        # step), not from an ad-hoc hemi_for call in the timed path
+        spec = kan.KANSpec.single(64, 1, cfg, base_activation="")
+        deployed = kan.deploy(kan.init(key, spec), spec)
+        hemi = deployed.layers[0].hemi
         asp_fn = jax.jit(lambda xx: quant.quantized_basis(xx, hemi, cfg))
         rec_fn = jax.jit(lambda xx: splines.bspline_basis_uniform(
             xx, cfg.x_min, cfg.x_max, cfg.grid_size, cfg.order))

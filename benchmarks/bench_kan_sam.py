@@ -1,12 +1,16 @@
-"""Fig. 18: KAN-SAM vs uniform mapping — MAC error across array sizes
-(the accuracy-level version runs in tests/test_cf_kan.py with a trained
-CF-KAN; this benchmark reports the underlying MAC-error mechanism)."""
+"""Fig. 18: KAN-SAM vs uniform mapping — MAC error across array sizes,
+measured through the unified deploy/apply contract: three artifacts per
+array size (zero-IR-drop reference, uniform mapping, KAN-SAM mapping) are
+built once with ``kan.deploy`` and evaluated with ``kan.apply``. (The
+accuracy-level version runs in tests/test_cf_kan.py with a trained CF-KAN;
+this benchmark reports the underlying MAC-error mechanism.)"""
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import kan_sam, quant
+from repro.core import kan, kan_sam
 from repro.core.quant import ASPConfig
 from repro.hw import cim
 
@@ -19,28 +23,32 @@ def run(emit):
         x = jnp.clip(jax.random.normal(key, (b, i)) * 0.35, -0.999, 0.999)
         coeffs = jax.random.normal(jax.random.fold_in(key, g),
                                    (i, asp.n_basis, o))
-        codes, _ = quant.quantize_coeffs(coeffs, asp, axis=(0, 1))
+        params = {"coeffs": coeffs}
         stats = kan_sam.update_stats(kan_sam.init_stats(i, asp), x, asp)
-        hemi = quant.hemi_for(asp)
-        basis = quant.quantized_basis(x, hemi, asp).reshape(b, -1)
-        w = codes.reshape(-1, o)
-        ccfg = cim.CIMConfig(array_size=array_size)
 
+        # the inputs are pre-clipped to the knot range: no tanh bound, so
+        # the word-line values match Fig. 18's protocol exactly
+        spec = kan.KANSpec.single(i, o, asp, base_activation="",
+                                  bound_input=False, backend="cim",
+                                  cim=cim.CIMConfig(array_size=array_size))
         # isolate the IR-drop error (the thing KAN-SAM addresses): reference
         # is the SAME analog chain (WL DAC + ADC) with zero IR drop, matching
         # Fig. 18's "degradation from KAN software baseline" protocol.
-        ref_out = cim.cim_forward(basis, w, ccfg,
-                                  atten_of_logical=jnp.ones(w.shape[0]))
+        dep_ref = kan.deploy(params, dataclasses.replace(
+            spec, cim=cim.CIMConfig(array_size=array_size, gamma0=0.0)))
+        dep_uni = kan.deploy(params, spec)
+        dep_sam = kan.deploy(params,
+                             dataclasses.replace(spec, use_sam=True),
+                             stats=stats)
+
+        ref_out = kan.apply(dep_ref, x)
         scale = float(jnp.mean(jnp.abs(ref_out))) + 1e-9
 
         t0 = time.perf_counter()
-        out_uni = cim.cim_forward(basis, w, ccfg)
+        out_uni = kan.apply(dep_uni, x)
         us = (time.perf_counter() - t0) * 1e6
         e_uni = float(jnp.mean(jnp.abs(out_uni - ref_out))) / scale
-        cw = kan_sam.criticality(stats, codes)
-        att = kan_sam.sam_attenuation(
-            cw, cim.row_attenuation(w.shape[0], ccfg)).reshape(-1)
-        out_sam = cim.cim_forward(basis, w, ccfg, atten_of_logical=att)
+        out_sam = kan.apply(dep_sam, x)
         e_sam = float(jnp.mean(jnp.abs(out_sam - ref_out))) / scale
         emit(f"fig18_As{array_size}_G{g}", us,
              f"irdrop_err_uniform={e_uni:.4f};irdrop_err_sam={e_sam:.4f};"

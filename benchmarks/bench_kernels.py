@@ -1,15 +1,16 @@
-"""Kernel-level microbench: fused Pallas KAN layer vs expanded-basis baseline
-vs float reference (CPU interpret timings; TPU perf is assessed structurally
-via §Roofline — see EXPERIMENTS.md)."""
+"""Kernel-level microbench: the four KAN backends (ref / lut / fused / cim)
+through the unified ``kan.deploy()`` → ``kan.apply()`` contract — one sweep,
+one API, artifacts frozen once outside the timed region (CPU interpret
+timings; TPU perf is assessed structurally via §Roofline — EXPERIMENTS.md).
+"""
+import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import kan_layer, quant
-from repro.core.kan_layer import KANLayerConfig
+from repro.core import kan
 from repro.core.quant import ASPConfig
-from repro.kernels import ops
+from repro.hw import cim
 
 
 def _time(fn, *args, n=5):
@@ -25,37 +26,27 @@ def run(emit):
     key = jax.random.PRNGKey(0)
     b, i, o = 256, 128, 256
     asp = ASPConfig(grid_size=8)
+    spec = kan.KANSpec.single(i, o, asp, base_activation="")
+    params = kan.init(key, spec)
     x = jax.random.uniform(key, (b, i), minval=-1, maxval=1)
-    coeffs = jax.random.normal(key, (i, asp.n_basis, o)) * 0.3
-
-    lcfg_ref = KANLayerConfig(i, o, asp, base_activation="", impl="ref")
-    lcfg_base = KANLayerConfig(i, o, asp, base_activation="", impl="baseline")
-    params = {"coeffs": coeffs}
-
-    t_ref = _time(jax.jit(
-        lambda xx: kan_layer.apply_kan_layer(params, xx, lcfg_ref)), x)
-    t_base = _time(jax.jit(
-        lambda xx: kan_layer.apply_kan_layer(params, xx, lcfg_base)), x)
-    t_fused = _time(jax.jit(
-        lambda xx: ops.kan_spline_fused(xx, coeffs, asp)), x)
 
     flops = 2 * b * i * asp.n_basis * o
-    hbm_baseline = (b * i * asp.n_basis * 4        # expanded E materialized
-                    + i * asp.n_basis * o * 4 + b * o * 4)
+    hbm_lut = (b * i * asp.n_basis * 4        # expanded E materialized
+               + i * asp.n_basis * o * 4 + b * o * 4)
     hbm_fused = (b * i * 4 + i * asp.n_basis * o   # int8 coeffs
                  + b * o * 4)
-    emit("kernel_kan_ref_float", t_ref, f"flops={flops}")
-    emit("kernel_kan_baseline_expanded", t_base,
-         f"hbm_bytes={hbm_baseline}")
-    emit("kernel_kan_fused_pallas_interp", t_fused,
-         f"hbm_bytes={hbm_fused};traffic_reduction="
-         f"{hbm_baseline / hbm_fused:.1f}x")
-
-    # CIM MAC simulator
-    v = jax.random.uniform(key, (b, i * asp.n_basis))
-    codes, _ = quant.quantize_coeffs(coeffs, asp, axis=(0, 1))
-    w = codes.reshape(-1, o)
-    att = jnp.ones((w.shape[0],))
-    t_cim = _time(lambda vv: ops.cim_mac(vv, w, att, array_size=256), v)
-    emit("kernel_cim_mac_interp", t_cim,
-         f"arrays={w.shape[0] // 256};bit_slices=8")
+    derived = {
+        "ref": f"flops={flops}",
+        "lut": f"hbm_bytes={hbm_lut}",
+        "fused": (f"hbm_bytes={hbm_fused};traffic_reduction="
+                  f"{hbm_lut / hbm_fused:.1f}x"),
+        "cim": f"arrays={-(-(i * asp.n_basis) // 256)};bit_slices=8",
+    }
+    for backend in ("ref", "lut", "fused", "cim"):
+        dspec = dataclasses.replace(
+            spec, backend=backend,
+            cim=cim.CIMConfig(array_size=256) if backend == "cim" else None)
+        deployed = kan.deploy(params, dspec)      # artifact frozen ONCE
+        fn = jax.jit(lambda xx, d=deployed: kan.apply(d, xx))
+        t = _time(fn, x)
+        emit(f"kan_backend_{backend}", t, f"deployed=1;{derived[backend]}")

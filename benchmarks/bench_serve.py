@@ -24,7 +24,24 @@ import traceback
 RESULTS_PATH = os.path.join(os.path.dirname(__file__),
                             "../results/BENCH_serve.json")
 SCHEMA = "bench_serve/v1"
-DEFAULT_ARCHS = ["mistral_nemo_12b", "mamba2_1p3b"]
+# one attn + one ssd arch, plus the KAN-FFN arch exercising the core.kan
+# deploy()/apply() contract (its row carries the requant-free proof)
+DEFAULT_ARCHS = ["mistral_nemo_12b", "mamba2_1p3b", "kan_llm"]
+
+
+def _decode_tick_requant_free(eng, cfg) -> bool:
+    """Trace one fused decode tick over the engine's (deployed) params and
+    verify it creates no int8 values — i.e. coefficient quantization ran at
+    deploy time, not per tick."""
+    import jax.numpy as jnp
+    from repro.core import kan
+    from repro.serve import engine as engine_lib
+
+    tokens = jnp.zeros((eng.n_slots,), jnp.int32)
+    index = jnp.ones((eng.n_slots,), jnp.int32)
+    return not kan.trace_requantizes(
+        lambda p, c, t, i: engine_lib._decode_fn(p, c, t, i, cfg=cfg),
+        eng.params, eng.cache, tokens, index)
 
 
 def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
@@ -52,7 +69,7 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
                   max_len=prompt_len + new_tokens).adopt_compiled(eng)
     eng2.run(list(reqs))
     rep = eng2.stats.report()
-    return {
+    row = {
         "arch": arch_id, "family": m.family, "smoke": smoke, "ok": True,
         "n_slots": slots, "requests": requests,
         "completed": rep["completed"],
@@ -64,6 +81,13 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
         "evicted_eos": rep["evicted_eos"],
         "evicted_length": rep["evicted_length"],
     }
+    if eng2.kan_deployed:
+        # the KAN-FFN row proves the two-phase contract: artifacts frozen
+        # at engine construction, decode tick free of requantization
+        row["kan_deployed"] = True
+        row["kan_backend"] = m.kan_backend
+        row["requant_free"] = _decode_tick_requant_free(eng2, m)
+    return row
 
 
 def load_record(path: str) -> dict:

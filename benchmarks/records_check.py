@@ -12,8 +12,10 @@ Checks
 * ``results/BENCH_serve.json`` — schema ``bench_serve/v1``, non-empty
   history with monotonically non-decreasing timestamps (append-only), and
   for the latest entry: one row per requested arch (no silently-missing
-  cell), every row ``ok`` with the required metrics, and row-level ``smoke``
-  flags consistent with the entry-level flag.
+  cell), every row ``ok`` with the required metrics, row-level ``smoke``
+  flags consistent with the entry-level flag, the KAN-FFN arch present,
+  and its row proving the deploy-once contract (``kan_deployed`` +
+  ``requant_free``).
 * ``results/dryrun/*.json`` — the ``smoke`` flag must agree with the
   ``__smoke`` filename convention (report.py labels smoke records).
 
@@ -39,6 +41,10 @@ KERNEL_ROW_KEYS = {"module", "name", "us_per_call", "derived"}
 SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
                   "completed", "requests_per_s", "tokens_per_s",
                   "mean_occupancy", "slot_reuse", "ticks"}
+# the CI serving sweep must include the KAN-FFN arch: its row proves the
+# deploy-once contract (kan_deployed) and the requant-free decode tick
+REQUIRED_SERVE_ARCHS = {"mistral_nemo_12b", "mamba2_1p3b", "kan_llm"}
+KAN_SERVE_ROW_KEYS = {"kan_deployed", "kan_backend", "requant_free"}
 
 
 def _load(path: str, problems: List[str]):
@@ -116,6 +122,10 @@ def check_serve(path: str, problems: List[str]) -> None:
     if expected - got:
         problems.append(f"{path}: latest entry missing rows for "
                         f"{sorted(expected - got)} (silently-missing cells)")
+    if REQUIRED_SERVE_ARCHS - expected:
+        problems.append(f"{path}: latest entry did not request "
+                        f"{sorted(REQUIRED_SERVE_ARCHS - expected)} (the CI "
+                        "serving sweep must cover the KAN deployed path)")
     for row in rows:
         arch = row.get("arch", "?")
         if row.get("ok") is not True:
@@ -139,6 +149,17 @@ def check_serve(path: str, problems: List[str]) -> None:
             v = row[k]
             if not (isinstance(v, (int, float)) and v > 0):
                 problems.append(f"{path}: row {arch!r} has bad {k} {v!r}")
+        if "kan" in arch:
+            missing_kan = KAN_SERVE_ROW_KEYS - set(row)
+            if missing_kan:
+                problems.append(f"{path}: KAN row {arch!r} missing keys "
+                                f"{sorted(missing_kan)}")
+            elif not (row["kan_deployed"] is True
+                      and row["requant_free"] is True):
+                problems.append(
+                    f"{path}: KAN row {arch!r} does not prove the deployed "
+                    f"hot path (kan_deployed={row['kan_deployed']!r}, "
+                    f"requant_free={row['requant_free']!r})")
 
 
 def check_dryrun(dirpath: str, problems: List[str]) -> None:

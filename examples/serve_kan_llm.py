@@ -1,30 +1,30 @@
 """Serve a KAN-FFN LLM under continuous batching — the paper's §1 thesis
 (KAN replacing transformer MLP blocks) behind the production serving path:
-staggered request arrivals join a running batch via repro.serve.engine
-(prefill-on-admit, fused multi-slot decode, EOS/length eviction).
+the engine freezes the KAN artifacts ONCE at construction (``kan.deploy``
+via ``tfm.deploy_kan``: int8 codes + scales + SH-LUT), then staggered
+request arrivals join a running batch via repro.serve.engine
+(prefill-on-admit, fused multi-slot decode, EOS/length eviction) with a
+requantization-free decode tick.
 
     PYTHONPATH=src python examples/serve_kan_llm.py
 """
 import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_arch
+from repro.core import kan
 from repro.models import transformer as tfm
-from repro.models.transformer import LayerSpec, ModelConfig
 from repro.serve.engine import Engine, synth_trace
 from repro.serve.scheduler import AdmissionQueue
 
-cfg = ModelConfig(
-    name="kan-llm-30m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
-    d_ff=1024, vocab=4096, dtype=jnp.float32,
-    block_pattern=(LayerSpec("attn", "kan"),), kan_grid=8, kan_order=3)
+cfg = get_arch("kan_llm").model       # 4L d=256 KAN-FFN registry arch
 key = jax.random.PRNGKey(0)
 params = tfm.init_model(key, cfg)
 n = tfm.count_params(params)
-print(f"model: {cfg.n_layers}L d={cfg.d_model} KAN-FFN(G={cfg.kan_grid}) "
-      f"-> {n/1e6:.1f}M params")
+print(f"model: {cfg.n_layers}L d={cfg.d_model} KAN-FFN(G={cfg.kan_grid}, "
+      f"backend={cfg.kan_backend}) -> {n/1e6:.1f}M params")
 
 # 12 requests arriving every 2 ticks, heterogeneous prompt lengths/budgets,
 # served by a 4-slot pool: requests join and leave the running batch.
@@ -33,6 +33,12 @@ reqs = synth_trace(cfg.vocab, 12, max_prompt=64, min_prompt=24, max_new=24,
                    min_new=8, stagger=2, seed=0)
 eng = Engine(params, cfg, n_slots=SLOTS, max_len=MAX_LEN,
              queue=AdmissionQueue(max_pending=32))
+assert eng.kan_deployed, "engine must freeze KAN artifacts at construction"
+art = eng.params["stages"][0]["l0"]["kan"]
+assert isinstance(art, kan.DeployedKAN)
+print(f"deployed once: backend={art.spec.backend}, per-layer codes "
+      f"{tuple(art.layers[0].codes.shape)} int8 + SH-LUT "
+      f"{tuple(art.layers[0].hemi.shape)}")
 comps = eng.run(reqs)
 
 rep = eng.stats.report()

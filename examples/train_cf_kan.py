@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import kan
 from repro.core.quant import ASPConfig
 from repro.data import cf_synth
 from repro.hw import cim, cost_model
@@ -59,7 +60,7 @@ def main():
 
     xv, hv = jnp.asarray(val.observed), jnp.asarray(val.held_out)
     s_float = cf_kan.apply(params, xv,
-                           dataclasses.replace(cfg, impl="ref"))
+                           dataclasses.replace(cfg, backend="ref"))
     s_quant = cf_kan.apply(params, xv, cfg, qat=True)
     r_f = float(cf_kan.recall_at_k(s_float, hv, xv))
     r_q = float(cf_kan.recall_at_k(s_quant, hv, xv))
@@ -83,9 +84,14 @@ def main():
     norm = float(jnp.mean(jnp.abs(s_ref)))
     for as_ in (128, 256, 512, 1024):
         ccfg = cim.CIMConfig(array_size=as_, gamma0=0.08)
-        s_uni = cf_kan.apply_cim(params, x_all, cfg, ccfg, use_sam=False)
-        s_sam = cf_kan.apply_cim(params, x_all, cfg, ccfg, use_sam=True,
-                                 stats=stats)
+        # two-phase contract: each mapping is deployed ONCE (codes,
+        # bit-slices, SH-LUT, SAM row order/attenuation frozen into the
+        # artifact), then served through the single kan.apply entry point
+        dep_uni = cf_kan.deploy(params, cfg, cim_cfg=ccfg)
+        dep_sam = cf_kan.deploy(params, cfg, cim_cfg=ccfg, use_sam=True,
+                                stats=stats)
+        s_uni = kan.apply(dep_uni, x_all)
+        s_sam = kan.apply(dep_sam, x_all)
         e_uni = float(jnp.mean(jnp.abs(s_uni - s_ref))) / norm
         e_sam = float(jnp.mean(jnp.abs(s_sam - s_ref))) / norm
         d_uni = max(r_ref - float(cf_kan.recall_at_k(s_uni, h_all, x_all)), 0)

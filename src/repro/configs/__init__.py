@@ -22,6 +22,14 @@ ARCH_IDS = [
     "cf_kan_1", "cf_kan_2",
 ]
 
+# Servable extras: registry archs that are NOT part of the assigned
+# published-architecture matrix (no dry-run cells, no hyperparameter-table
+# row) but are first-class for launch.serve / bench_serve — currently the
+# KAN-FFN LLM that exercises the core.kan deploy()/apply() contract.
+AUX_ARCH_IDS = [
+    "kan_llm",
+]
+
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
@@ -63,8 +71,9 @@ class ArchConfig:
 
 def get_arch(name: str, smoke: bool = False) -> ArchConfig:
     name = name.replace("-", "_").replace(".", "p")
-    if name not in ARCH_IDS:
-        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    if name not in ARCH_IDS and name not in AUX_ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; available: "
+                       f"{ARCH_IDS + AUX_ARCH_IDS}")
     mod = importlib.import_module(f"repro.configs.{name}")
     return mod.SMOKE if smoke else mod.CONFIG
 

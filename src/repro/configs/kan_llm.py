@@ -1,0 +1,32 @@
+"""KAN-FFN LLM: the paper's §1 thesis (KAN replacing the transformer MLP
+blocks) as a servable registry arch, so the serving launcher, the serving
+benchmark and CI exercise the full deploy()/apply() contract end to end —
+KAN artifacts are frozen once at engine construction and the decode tick is
+requantization-free.
+
+Not one of the assigned published architectures: it lives in
+``AUX_ARCH_IDS`` (servable extras), outside the dry-run matrix and the
+published-hyperparameter table test.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models.transformer import LayerSpec, ModelConfig
+
+MODEL = ModelConfig(
+    name="kan-llm-30m", n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+    d_ff=1024, vocab=4096, dtype=jnp.float32,
+    block_pattern=(LayerSpec("attn", "kan"),),
+    kan_grid=8, kan_order=3, kan_backend="lut")
+
+CONFIG = ArchConfig(model=MODEL, optimizer="adamw", learning_rate=3e-4,
+                    notes="KAN-FFN serving vehicle for the deploy/apply "
+                          "contract (core.kan backend registry)")
+
+SMOKE = ArchConfig(
+    model=dataclasses.replace(
+        MODEL, name="kan-llm-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256),
+    optimizer="adamw", learning_rate=3e-4)

@@ -1,27 +1,16 @@
-"""KAN layers: the paper's compute primitive, in three implementations.
+"""DEPRECATED shim over :mod:`repro.core.kan` (the unified backend API).
 
-    phi(x) = w_b * b(x) + sum_i ci' * B_i(x)          (paper Eqs. 1-3)
+Historically this module held three parallel KAN implementations selected by
+``impl`` strings. That dispatch now lives in the backend registry of
+``repro.core.kan`` behind the two-phase ``deploy()``/``apply()`` contract;
+this file only keeps the legacy config names importable:
 
-with ``b = ReLU`` (the paper substitutes ReLU for SiLU for hardware
-efficiency, §2.1) and ``ci' = w_s * c_i`` pre-merged and 8-bit quantized.
+    impl="ref"      -> backend "ref"
+    impl="baseline" -> backend "lut"
+    impl="fused"    -> backend "fused"
 
-Implementations
----------------
-* ``impl="ref"``      — float Cox–de Boor/cardinal oracle. Ground truth.
-* ``impl="baseline"`` — the paper-faithful ACIM dataflow on MXU: quantize the
-  input (ASP-KAN-HAQ), look up K+1 taps in the SH-LUT, scatter them into the
-  dense G+K "word-line" basis vector, and contract the expanded basis
-  ``E in [batch, I*(G+K)]`` against the coefficient matrix
-  ``C' in [I*(G+K), O]`` — exactly the crossbar MAC with B_i(x) on word lines
-  and ci' in the array. This materializes E in HBM ((G+K)x activation
-  blow-up): it is the performance baseline recorded in EXPERIMENTS.md §Perf.
-* ``impl="fused"``    — Pallas TPU kernel (kernels/kan_fused.py): quantize →
-  SH-LUT → expand → MXU contract fused in VMEM, E never touches HBM. Forward
-  is bit-identical to ``baseline``; backward uses the float-path VJP
-  (straight-through QAT convention).
-
-Training uses fake-quant (STE) so the same parameters serve float eval,
-quantized eval, and the CIM simulator.
+New code should build a ``kan.KANSpec`` directly and go through
+``kan.deploy``/``kan.apply`` (serving) or ``kan.train_apply`` (training).
 """
 from __future__ import annotations
 
@@ -31,151 +20,79 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant, splines
+from repro.core import kan
 from repro.core.quant import ASPConfig
 
 Array = jax.Array
 
+_IMPL_TO_BACKEND = {"ref": "ref", "baseline": "lut", "fused": "fused",
+                    "cim": "cim"}
+
+
+def _backend_for(impl: str) -> str:
+    try:
+        return _IMPL_TO_BACKEND[impl]
+    except KeyError:
+        raise ValueError(f"unknown impl {impl!r}") from None
+
 
 @dataclasses.dataclass(frozen=True)
 class KANLayerConfig:
+    """Legacy single-layer config; ``.spec`` is the KANSpec equivalent."""
     in_dim: int
     out_dim: int
     asp: ASPConfig = ASPConfig()
     base_activation: str = "relu"   # paper: ReLU residual branch; "" disables
-    impl: str = "baseline"           # "ref" | "baseline" | "fused"
-    bound_input: bool = True         # tanh-bound inputs into [x_min, x_max]
+    impl: str = "baseline"           # legacy alias for KANSpec.backend
+    bound_input: bool = True
     dtype: jnp.dtype = jnp.float32
+
+    @property
+    def spec(self) -> kan.KANSpec:
+        return kan.KANSpec.single(
+            self.in_dim, self.out_dim, self.asp,
+            backend=_backend_for(self.impl),
+            base_activation=self.base_activation,
+            bound_input=self.bound_input, dtype=self.dtype)
 
 
 def init_kan_layer(key: Array, cfg: KANLayerConfig) -> Dict[str, Array]:
-    """Init: small-noise spline coefficients + LeCun base weights.
-
-    Matches the original KAN init (spline ~ noise, base carries signal early).
-    """
-    k_c, k_b = jax.random.split(key)
-    n_basis = cfg.asp.n_basis
-    coeffs = (jax.random.normal(k_c, (cfg.in_dim, n_basis, cfg.out_dim),
-                                dtype=jnp.float32)
-              * (0.1 / jnp.sqrt(cfg.in_dim)))
-    params = {"coeffs": coeffs.astype(cfg.dtype)}
-    if cfg.base_activation:
-        w_b = (jax.random.normal(k_b, (cfg.in_dim, cfg.out_dim),
-                                 dtype=jnp.float32)
-               / jnp.sqrt(cfg.in_dim))
-        params["w_base"] = w_b.astype(cfg.dtype)
-    return params
-
-
-def _base_branch(x: Array, params: Dict[str, Array], cfg: KANLayerConfig) -> Array:
-    if not cfg.base_activation:
-        return 0.0
-    act = {"relu": jax.nn.relu, "silu": jax.nn.silu}[cfg.base_activation]
-    return act(x) @ params["w_base"]
-
-
-def _bound(x: Array, cfg: KANLayerConfig) -> Array:
-    """Map pre-activations into the spline's knot range.
-
-    KAN grids are defined on a fixed range; production KAN stacks bound the
-    input (efficient-KAN uses LayerNorm, we use tanh scaled to the range so
-    the bound is exact rather than statistical).
-    """
-    if not cfg.bound_input:
-        return x
-    a = cfg.asp
-    half = 0.5 * (a.x_max - a.x_min)
-    mid = 0.5 * (a.x_max + a.x_min)
-    return mid + half * jnp.tanh(x.astype(jnp.float32)).astype(x.dtype)
-
-
-def _spline_ref(x: Array, coeffs: Array, asp: ASPConfig) -> Array:
-    basis = splines.bspline_basis_uniform(
-        x, asp.x_min, asp.x_max, asp.grid_size, asp.order)  # [..., I, G+K]
-    return jnp.einsum("...ig,igo->...o", basis, coeffs)
-
-
-def _spline_baseline(x: Array, coeffs: Array, asp: ASPConfig,
-                     hemi: Optional[Array]) -> Array:
-    """Quantized expanded-basis matmul (ACIM-faithful)."""
-    if hemi is None:
-        hemi = quant.hemi_for(asp, dtype=jnp.float32)
-    basis = quant.quantized_basis(x, hemi, asp)  # [..., I, G+K]
-    basis = basis.astype(coeffs.dtype)
-    lead = basis.shape[:-2]
-    ik = basis.shape[-2] * basis.shape[-1]
-    e = basis.reshape(lead + (ik,))
-    c2 = coeffs.reshape(ik, coeffs.shape[-1])
-    return e @ c2
-
-
-def _spline_qat(x: Array, coeffs: Array, asp: ASPConfig,
-                hemi: Optional[Array]) -> Array:
-    """Quantized forward with float-path straight-through backward."""
-    yq = _spline_baseline(x, coeffs, asp, hemi)
-    yf = _spline_ref(x, coeffs, asp)
-    return yf + jax.lax.stop_gradient(yq - yf)
+    return kan.init(key, cfg.spec)
 
 
 def apply_kan_layer(params: Dict[str, Array], x: Array, cfg: KANLayerConfig,
                     hemi: Optional[Array] = None, *,
                     qat: bool = False) -> Array:
     """Apply one KAN layer. x: [..., in_dim] -> [..., out_dim]."""
-    xb = _bound(x, cfg)
-    coeffs = params["coeffs"]
-    if qat:
-        codes, scale = quant.quantize_coeffs(coeffs, cfg.asp, axis=(0, 1))
-        cq = quant.dequantize_coeffs(codes, scale).astype(coeffs.dtype)
-        coeffs = coeffs + jax.lax.stop_gradient(cq - coeffs)
-    if cfg.impl == "ref":
-        y = _spline_ref(xb, coeffs, cfg.asp)
-    elif cfg.impl == "baseline":
-        y = (_spline_qat(xb, coeffs, cfg.asp, hemi) if qat
-             else _spline_baseline(xb, coeffs, cfg.asp, hemi))
-    elif cfg.impl == "fused":
-        from repro.kernels import ops as kernel_ops  # lazy: avoid cycle
-        y = kernel_ops.kan_layer_fused(xb, coeffs, cfg.asp, hemi=hemi)
-    else:
-        raise ValueError(f"unknown impl {cfg.impl!r}")
-    return y + _base_branch(xb, params, cfg)
+    del hemi  # derived from cfg.asp (one cached SH-LUT per family)
+    return kan.train_apply(params, x, cfg.spec, qat=qat)
 
-
-# ---------------------------------------------------------------------------
-# KAN-FFN: drop-in replacement for a transformer MLP block (the paper's §1
-# motivation: KAN replacing the MLP building blocks of large models).
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class KANFFNConfig:
+    """Legacy transformer KAN-FFN config; ``.spec`` is the KANSpec form."""
     d_model: int
-    hidden: int                      # KAN hidden width (param-parity: ~d_ff/(G+K))
+    hidden: int                      # KAN hidden width (~d_ff/(G+K))
     asp: ASPConfig = ASPConfig(grid_size=8, order=3, n_bits=8)
     impl: str = "baseline"
     dtype: jnp.dtype = jnp.bfloat16
 
-    def layer_cfgs(self):
-        up = KANLayerConfig(self.d_model, self.hidden, self.asp,
-                            impl=self.impl, dtype=self.dtype)
-        down = KANLayerConfig(self.hidden, self.d_model, self.asp,
-                              impl=self.impl, dtype=self.dtype)
-        return up, down
+    @property
+    def spec(self) -> kan.KANSpec:
+        return kan.KANSpec.ffn(self.d_model, self.hidden, self.asp,
+                               backend=_backend_for(self.impl),
+                               dtype=self.dtype)
 
 
 def init_kan_ffn(key: Array, cfg: KANFFNConfig) -> Dict[str, Dict[str, Array]]:
-    k1, k2 = jax.random.split(key)
-    up, down = cfg.layer_cfgs()
-    return {"up": init_kan_layer(k1, up), "down": init_kan_layer(k2, down)}
+    return kan.init(key, cfg.spec)
 
 
 def apply_kan_ffn(params, x: Array, cfg: KANFFNConfig,
                   hemi: Optional[Array] = None, qat: bool = False) -> Array:
-    up, down = cfg.layer_cfgs()
-    h = apply_kan_layer(params["up"], x, up, hemi, qat=qat)
-    return apply_kan_layer(params["down"], h, down, hemi, qat=qat)
+    del hemi
+    return kan.train_apply(params, x, cfg.spec, qat=qat)
 
 
 def kan_layer_param_count(cfg: KANLayerConfig) -> int:
-    n = cfg.in_dim * cfg.asp.n_basis * cfg.out_dim
-    if cfg.base_activation:
-        n += cfg.in_dim * cfg.out_dim
-    return n
+    return kan.param_count(cfg.spec)

@@ -129,18 +129,27 @@ def row_mapping(c_w: Array, row_order: Optional[np.ndarray] = None
     return phys_of_logical, logical_of_phys
 
 
-def sam_attenuation(c_w: Array, atten_by_position: Array) -> Array:
-    """Effective per-logical-row attenuation under the KAN-SAM mapping.
+def sam_row_map(c_w: Array, atten_by_position: Array) -> Tuple[Array, Array]:
+    """The KAN-SAM mapping, computed in ONE place: returns
+    ``(phys_of_logical [R] int32, atten_of_logical [R] float)``.
 
     atten_by_position: [R] IR-drop attenuation of each *physical* row.
     Physical positions repeat per array (row r sits at distance r mod As), so
     the nearest-first RowOrder sorts physical rows by DESCENDING attenuation
     (one near slot per array comes before any far slot) — Alg. 1's
-    "precomputed row order (nearest -> farthest)". Returns [I, S] attenuation
-    experienced by each logical row after mapping.
+    "precomputed row order (nearest -> farthest)". Both outputs derive from
+    the SAME permutation, so the frozen ``row_order`` of a deployed artifact
+    can never disagree with the attenuation actually applied.
     """
     att_np = np.asarray(atten_by_position)
     row_order = np.argsort(-att_np, kind="stable")   # nearest-first
     phys_of_logical, _ = row_mapping(c_w, row_order=row_order)
-    att = jnp.asarray(atten_by_position)[phys_of_logical]
-    return att.reshape(c_w.shape)
+    atten = jnp.asarray(atten_by_position)[phys_of_logical]
+    return phys_of_logical, atten
+
+
+def sam_attenuation(c_w: Array, atten_by_position: Array) -> Array:
+    """Effective per-logical-row attenuation under the KAN-SAM mapping,
+    reshaped to [I, S] (see ``sam_row_map`` for the mapping itself)."""
+    _, atten = sam_row_map(c_w, atten_by_position)
+    return atten.reshape(c_w.shape)

@@ -195,12 +195,23 @@ def quantized_basis(x: Array, hemi: Array, cfg: ASPConfig) -> Array:
 # Coefficient quantization (ci' -> int8 with per-output-channel scale).
 # ---------------------------------------------------------------------------
 
-def quantize_coeffs(c: Array, cfg: ASPConfig, axis: int = -1) -> Tuple[Array, Array]:
+def quantize_coeffs(c: Array, cfg: ASPConfig,
+                    axis: int | Tuple[int, ...] = -1) -> Tuple[Array, Array]:
     """Symmetric per-channel int quantization of spline coefficients ci'.
 
-    Returns (int8 codes, float scale broadcastable against ``c``). The paper
-    stores ci' as 8-bit values bit-sliced across a fixed 8-column template
-    (Alg. 1 Phase B); the int8 code here is exactly that digital magnitude.
+    ``axis`` names the dimension(s) REDUCED to find each channel's |max| —
+    every dimension NOT in ``axis`` keeps its own scale. The repo-wide
+    convention for ``coeffs [I, S, O]`` is ``axis=(0, 1)``: one scale per
+    OUTPUT channel (the crossbar column / bit-line group shares one ADC
+    range, so all I*S rows feeding a column must share a scale). The
+    deploy/QAT paths (core.kan, kernels.ops) all quantize with that
+    convention; the default ``-1`` covers the generic per-row case.
+
+    Returns (int8 codes, float scale with ``keepdims`` so it broadcasts
+    against ``c``: shape [1, 1, O] under the per-output-channel convention).
+    The paper stores ci' as 8-bit values bit-sliced across a fixed 8-column
+    template (Alg. 1 Phase B); the int8 code here is exactly that digital
+    magnitude.
     """
     qmax = 2 ** (cfg.coeff_bits - 1) - 1
     amax = jnp.max(jnp.abs(c), axis=axis, keepdims=True)

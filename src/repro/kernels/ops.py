@@ -56,16 +56,26 @@ def kan_spline_fused(x: Array, coeffs: Array, asp: ASPConfig) -> Array:
     return _fused_fwd_impl(x, coeffs, asp)
 
 
-def _fused_fwd_impl(x: Array, coeffs: Array, asp: ASPConfig) -> Array:
+def kan_spline_fused_deployed(x: Array, codes: Array, scale: Array,
+                              asp: ASPConfig,
+                              hemi: Optional[Array] = None) -> Array:
+    """Deployed-path fused forward: frozen int8 codes + per-output-channel
+    scales (+ the artifact's SH-LUT) go straight into the Pallas kernel —
+    no ``quantize_coeffs``/``hemi_for`` in the caller's hot loop. This is
+    what ``core.kan``'s "fused" backend runs at serving time.
+
+    x: [..., I] float (bounded); codes: [I, S, O] int8; scale: broadcastable
+    to [O]. Returns [..., O] in x.dtype.
+    """
     lead = x.shape[:-1]
     i = x.shape[-1]
-    o = coeffs.shape[-1]
+    o = codes.shape[-1]
     s = asp.n_basis
     xf = x.reshape(-1, i)
     b = xf.shape[0]
-
-    codes, scale = quant.quantize_coeffs(coeffs, asp, axis=(0, 1))
     scale_o = scale.reshape(1, o).astype(jnp.float32)
+    if hemi is None:
+        hemi = quant.hemi_for(asp)
 
     bb, bi, bo = _pick_blocks(b, i, o, s)
     bp, ip, op = _round_up(b, bb), _round_up(i, bi), _round_up(o, bo)
@@ -73,11 +83,15 @@ def _fused_fwd_impl(x: Array, coeffs: Array, asp: ASPConfig) -> Array:
                  ((0, bp - b), (0, ip - i)), constant_values=asp.x_min)
     cp = jnp.pad(codes, ((0, ip - i), (0, 0), (0, op - o)))
     sp = jnp.pad(scale_o, ((0, 0), (0, op - o)), constant_values=1.0)
-    hemi = quant.hemi_for(asp)
 
     y = _kf.kan_fused(xp, cp, sp, hemi, asp=asp, block_b=bb, block_i=bi,
                       block_o=bo, interpret=_interpret_default())
     return y[:b, :o].reshape(lead + (o,)).astype(x.dtype)
+
+
+def _fused_fwd_impl(x: Array, coeffs: Array, asp: ASPConfig) -> Array:
+    codes, scale = quant.quantize_coeffs(coeffs, asp, axis=(0, 1))
+    return kan_spline_fused_deployed(x, codes, scale, asp)
 
 
 def _fused_fwd(x, coeffs, asp):
@@ -102,13 +116,6 @@ def _fused_bwd(asp, res, dy):
 
 
 kan_spline_fused.defvjp(_fused_fwd, _fused_bwd)
-
-
-def kan_layer_fused(x: Array, coeffs: Array, asp: ASPConfig,
-                    hemi: Optional[Array] = None) -> Array:
-    """Drop-in spline used by core.kan_layer impl="fused" (hemi derived)."""
-    del hemi  # derived from asp internally (single shared table per family)
-    return kan_spline_fused(x, coeffs, asp)
 
 
 # ---------------------------------------------------------------------------

@@ -103,7 +103,17 @@ def build_cell(arch: ArchConfig, shape: ShapeSpec, mesh):
         lambda k: tfm.init_model(k, m, n_model=n_model),
         jax.random.PRNGKey(0))
     pspec = tfm.param_spec(m)
-    params_in = _tree_structs_with_sharding(mesh, params_struct, pspec)
+    has_kan = any(sp.ffn == "kan" for sp in m.layer_specs())
+    if shape.kind in ("prefill", "decode") and has_kan:
+        # serving cells lower against the frozen DeployedKAN artifact (the
+        # deploy/apply contract): quantization happens at deploy, never in
+        # the lowered step. The artifact tree no longer matches param_spec,
+        # so it is replicated (KAN-FFN archs are small enough).
+        params_struct = jax.eval_shape(
+            lambda p: tfm.deploy_kan(p, m), params_struct)
+        params_in = _replicated_structs(mesh, params_struct)
+    else:
+        params_in = _tree_structs_with_sharding(mesh, params_struct, pspec)
 
     if shape.kind == "train":
         opt = make_optimizer(arch.optimizer,

@@ -43,6 +43,10 @@ def main(argv=None):
                     help="enter a (data x model) host mesh with this many "
                          "model ways (0 = no mesh)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kan-backend", default="",
+                    help="override ModelConfig.kan_backend for KAN-FFN "
+                         "archs (ref|lut|fused|cim; serving deploys the "
+                         "chosen backend's frozen artifact once)")
     ap.add_argument("--check", action="store_true",
                     help="CI gate: assert slot reuse + EOS eviction + "
                          "full completion")
@@ -50,6 +54,9 @@ def main(argv=None):
 
     arch = get_arch(args.arch, smoke=args.smoke)
     m = arch.model
+    if args.kan_backend:
+        import dataclasses
+        m = dataclasses.replace(m, kan_backend=args.kan_backend)
     key = jax.random.PRNGKey(args.seed)
     params = tfm.init_model(key, m)
 
@@ -88,8 +95,11 @@ def main(argv=None):
         comps = eng.run(reqs)
 
     rep = eng.stats.report()
+    kan_note = (f" kan_backend={m.kan_backend} (deployed once)"
+                if eng.kan_deployed else "")
     print(f"arch={m.name} slots={args.slots} requests={args.requests} "
-          f"stagger={args.stagger} mesh_model={args.mesh_model or 'none'}")
+          f"stagger={args.stagger} mesh_model={args.mesh_model or 'none'}"
+          f"{kan_note}")
     print(json.dumps(rep, indent=1))
     for c in comps[:4]:
         print(f"  rid={c.rid} reason={c.reason} slot={c.slot} "

@@ -47,10 +47,16 @@ def main(argv=None):
     ap.add_argument("--host-mesh", action="store_true")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--kan-backend", default="",
+                    help="override ModelConfig.kan_backend (the training "
+                         "path dispatches through the same core.kan "
+                         "registry as serving)")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
     m = arch.model
+    if args.kan_backend:
+        m = dataclasses.replace(m, kan_backend=args.kan_backend)
     mesh = make_host_mesh(args.model_parallel) if args.host_mesh else None
 
     opt = make_optimizer(arch.optimizer,

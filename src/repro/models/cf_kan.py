@@ -9,9 +9,12 @@ NDCG@k. Two operating points (Fig. 19):
              TD-P input mode in non-sensitive regions.
   CF-KAN-2 — "high accuracy": uniform G_high, TD-A everywhere.
 
-The same apply() runs in three fidelities: float reference, ASP-quantized
-(baseline/fused), and CIM-simulated (hw.cim error model + KAN-SAM mapping) —
-accuracy degradation is measured between the first and the last.
+Every fidelity runs through the unified ``repro.core.kan`` contract: the
+float reference and ASP-quantized paths are the ``ref``/``lut``/``fused``
+backends via ``kan.train_apply``; the CIM-simulated path (hw.cim error model
++ KAN-SAM mapping) is the registered ``cim`` backend consumed through
+``kan.deploy`` → ``kan.apply`` — accuracy degradation is measured between
+the first and the last.
 """
 from __future__ import annotations
 
@@ -21,8 +24,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import kan_layer, kan_sam, quant
-from repro.core.kan_layer import KANLayerConfig
+from repro.core import kan, kan_sam
 from repro.core.quant import ASPConfig
 from repro.hw import cim
 
@@ -35,21 +37,19 @@ class CFKANConfig:
     hidden: int
     asp_enc: ASPConfig
     asp_dec: ASPConfig
-    impl: str = "baseline"
+    backend: str = "lut"
     name: str = "cf-kan"
 
-    def layer_cfgs(self):
-        enc = KANLayerConfig(self.n_items, self.hidden, self.asp_enc,
-                             impl=self.impl)
-        dec = KANLayerConfig(self.hidden, self.n_items, self.asp_dec,
-                             impl=self.impl)
-        return enc, dec
+    @property
+    def kan_spec(self) -> kan.KANSpec:
+        return kan.KANSpec(
+            dims=(self.n_items, self.hidden, self.n_items),
+            asp=(self.asp_enc, self.asp_dec),
+            backend=self.backend, layer_names=("enc", "dec"))
 
     @property
     def n_params(self) -> int:
-        enc, dec = self.layer_cfgs()
-        return (kan_layer.kan_layer_param_count(enc)
-                + kan_layer.kan_layer_param_count(dec))
+        return kan.param_count(self.kan_spec)
 
     def with_grids(self, g_enc: int, g_dec: int) -> "CFKANConfig":
         return dataclasses.replace(self, asp_enc=self.asp_enc.with_grid(g_enc),
@@ -57,77 +57,54 @@ class CFKANConfig:
 
 
 def init(key: Array, cfg: CFKANConfig) -> Dict:
-    k1, k2 = jax.random.split(key)
-    enc, dec = cfg.layer_cfgs()
-    return {"enc": kan_layer.init_kan_layer(k1, enc),
-            "dec": kan_layer.init_kan_layer(k2, dec)}
+    return kan.init(key, cfg.kan_spec)
 
 
 def apply(params: Dict, x: Array, cfg: CFKANConfig, *, qat: bool = False) -> Array:
     """x: [B, n_items] normalized interaction vector -> item logits."""
-    enc, dec = cfg.layer_cfgs()
-    z = kan_layer.apply_kan_layer(params["enc"], x, enc, qat=qat)
-    return kan_layer.apply_kan_layer(params["dec"], z, dec, qat=qat)
+    return kan.train_apply(params, x, cfg.kan_spec, qat=qat)
+
+
+def deploy(params: Dict, cfg: CFKANConfig, *,
+           cim_cfg: Optional[cim.CIMConfig] = None, use_sam: bool = False,
+           stats: Optional[Dict[str, kan_sam.BasisStats]] = None
+           ) -> kan.DeployedKAN:
+    """One-shot serving artifact for CF-KAN. With ``cim_cfg`` the backend is
+    the bit-sliced crossbar simulator (KAN-SAM row mapping when ``use_sam``,
+    needing Phase-A ``stats`` keyed {"enc", "dec"})."""
+    spec = cfg.kan_spec
+    if cim_cfg is not None:
+        spec = spec.with_backend("cim", cim=cim_cfg, use_sam=use_sam)
+    return kan.deploy(params, spec, stats=stats)
 
 
 def apply_cim(params: Dict, x: Array, cfg: CFKANConfig, cim_cfg: cim.CIMConfig,
               *, use_sam: bool = False,
               stats: Optional[Dict[str, kan_sam.BasisStats]] = None,
               rng: Optional[Array] = None) -> Array:
-    """CIM-simulated forward: each KAN layer's spline MAC runs through the
-    bit-sliced crossbar simulator; KAN-SAM optionally remaps rows."""
-    enc_cfg, dec_cfg = cfg.layer_cfgs()
-    h = _cim_layer(params["enc"], x, enc_cfg, cim_cfg, use_sam,
-                   stats["enc"] if stats else None,
-                   _fold(rng, 0))
-    return _cim_layer(params["dec"], h, dec_cfg, cim_cfg, use_sam,
-                      stats["dec"] if stats else None,
-                      _fold(rng, 1))
-
-
-def _fold(rng, i):
-    return None if rng is None else jax.random.fold_in(rng, i)
-
-
-def _cim_layer(lp: Dict, x: Array, lcfg: KANLayerConfig,
-               cim_cfg: cim.CIMConfig, use_sam: bool,
-               stats: Optional[kan_sam.BasisStats],
-               rng: Optional[Array]) -> Array:
-    asp = lcfg.asp
-    xb = kan_layer._bound(x, lcfg)
-    hemi = quant.hemi_for(asp)
-    basis = quant.quantized_basis(xb, hemi, asp)          # [B, I, S] (WL values)
-    codes, scale = quant.quantize_coeffs(lp["coeffs"], asp, axis=(0, 1))
-
-    r = lcfg.in_dim * asp.n_basis
-    w = codes.reshape(r, lcfg.out_dim)
-    atten = None
-    if use_sam:
-        if stats is None:
-            raise ValueError("KAN-SAM needs Phase-A stats")
-        c_w = kan_sam.criticality(stats, codes)
-        pos_att = cim.row_attenuation(r, cim_cfg)
-        atten = kan_sam.sam_attenuation(c_w, pos_att).reshape(-1)
-    y = cim.cim_forward(basis.reshape(x.shape[0], r), w, cim_cfg,
-                        atten_of_logical=atten, rng=rng)
-    y = y * scale.reshape(1, -1)
-    base = kan_layer._base_branch(xb, lp, lcfg)
-    return y + base
+    """CIM-simulated forward — convenience wrapper over the deploy/apply
+    contract (each KAN layer's spline MAC runs through the bit-sliced
+    crossbar simulator; KAN-SAM optionally remaps rows)."""
+    deployed = deploy(params, cfg, cim_cfg=cim_cfg, use_sam=use_sam,
+                      stats=stats)
+    return kan.apply(deployed, x, rng=rng)
 
 
 def collect_layer_stats(params: Dict, batches, cfg: CFKANConfig
                         ) -> Dict[str, kan_sam.BasisStats]:
     """Phase A of Algorithm 1 for both layers (encoder inputs are data;
     decoder inputs are encoder outputs)."""
-    enc_cfg, dec_cfg = cfg.layer_cfgs()
-    s_enc = kan_sam.init_stats(enc_cfg.in_dim, enc_cfg.asp)
-    s_dec = kan_sam.init_stats(dec_cfg.in_dim, dec_cfg.asp)
+    spec = cfg.kan_spec
+    enc_spec = kan.KANSpec.single(cfg.n_items, cfg.hidden, cfg.asp_enc,
+                                  backend=cfg.backend)
+    s_enc = kan_sam.init_stats(cfg.n_items, cfg.asp_enc)
+    s_dec = kan_sam.init_stats(cfg.hidden, cfg.asp_dec)
     for x in batches:
-        xb = kan_layer._bound(x, enc_cfg)
-        s_enc = kan_sam.update_stats(s_enc, xb, enc_cfg.asp)
-        h = kan_layer.apply_kan_layer(params["enc"], x, enc_cfg)
-        hb = kan_layer._bound(h, dec_cfg)
-        s_dec = kan_sam.update_stats(s_dec, hb, dec_cfg.asp)
+        xb = kan.bound_input(x, cfg.asp_enc) if spec.bound_input else x
+        s_enc = kan_sam.update_stats(s_enc, xb, cfg.asp_enc)
+        h = kan.train_apply(params["enc"], x, enc_spec)
+        hb = kan.bound_input(h, cfg.asp_dec) if spec.bound_input else h
+        s_dec = kan_sam.update_stats(s_dec, hb, cfg.asp_dec)
     return {"enc": s_enc, "dec": s_dec}
 
 

@@ -22,7 +22,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import kan_layer
+from repro.core import kan
 from repro.core.quant import ASPConfig
 from repro.dist.sharding import shard
 from repro.models import attention as attn_lib
@@ -84,7 +84,7 @@ class ModelConfig:
     kan_hidden: int = 0                  # 0 -> d_ff // (G + K + 1)
     kan_grid: int = 8
     kan_order: int = 3
-    kan_impl: str = "baseline"
+    kan_backend: str = "lut"             # core.kan registry: ref|lut|fused|cim
     # execution
     dtype: Any = jnp.bfloat16
     param_dtype: Any = jnp.float32
@@ -122,13 +122,13 @@ class ModelConfig:
         return self._pad(self.n_kv_heads)
 
     @property
-    def kan_cfg(self) -> kan_layer.KANFFNConfig:
+    def kan_spec(self) -> kan.KANSpec:
         asp = ASPConfig(grid_size=self.kan_grid, order=self.kan_order)
         hidden = self.kan_hidden or max(
             8, self.d_ff // (self.kan_grid + self.kan_order + 1))
-        return kan_layer.KANFFNConfig(self.d_model, hidden, asp,
-                                      impl=self.kan_impl,
-                                      dtype=self.param_dtype)
+        return kan.KANSpec.ffn(self.d_model, hidden, asp,
+                               backend=self.kan_backend,
+                               dtype=self.param_dtype)
 
     @property
     def moe_cfg(self) -> moe_lib.MoEConfig:
@@ -277,7 +277,7 @@ def _init_layer(key, spec: LayerSpec, cfg: ModelConfig,
         p["moe"] = moe_lib.init_moe(ks[1], cfg.moe_cfg, n_model)
     elif spec.ffn == "kan":
         p["ffn_norm"] = layers.NORM_INIT[cfg.norm](cfg.d_model)
-        p["kan"] = kan_layer.init_kan_ffn(ks[1], cfg.kan_cfg)
+        p["kan"] = kan.init(ks[1], cfg.kan_spec)
     return p
 
 
@@ -303,7 +303,6 @@ def _layer_spec_tree(spec: LayerSpec, cfg: ModelConfig) -> Dict:
         s["ffn_norm"] = nrm
         s["moe"] = moe_lib.moe_spec(cfg.moe_cfg)
     elif spec.ffn == "kan":
-        kc = cfg.kan_cfg
         lay = {"coeffs": ("embed", "none", "mlp"), "w_base": ("embed", "mlp")}
         lay2 = {"coeffs": ("mlp", "none", "embed"), "w_base": ("mlp", "embed")}
         s["ffn_norm"] = nrm
@@ -471,8 +470,7 @@ def _apply_layer(p, x, spec: LayerSpec, cfg: ModelConfig, positions,
         x = x + y
     elif spec.ffn == "kan":
         xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
-        x = x + kan_layer.apply_kan_ffn(p["kan"], xn, cfg.kan_cfg
-                                        ).astype(x.dtype)
+        x = x + kan.apply_any(p["kan"], xn, cfg.kan_spec).astype(x.dtype)
     x = shard(x, "batch", "seq_sp" if cfg.seq_shard_activations else "seq",
               None)
     return x, aux
@@ -610,3 +608,42 @@ def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array]
 
 def count_params(params) -> int:
     return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# serving deployment: freeze KAN-FFN subtrees into integer artifacts
+# ---------------------------------------------------------------------------
+
+def deploy_kan(params, cfg: ModelConfig):
+    """Two-phase serving contract for KAN-FFN architectures: replace every
+    ``p["kan"]`` subtree with a frozen ``kan.DeployedKAN`` artifact (int8
+    codes + scales + SH-LUT), built EXACTLY ONCE — the serving hot loop then
+    contains no coefficient quantization (core.kan.trace_requantizes pins
+    this). Stacked (lax.scan) stages are deployed under vmap so the artifact
+    keeps the leading layer axis. Idempotent; returns ``params`` unchanged
+    (same object) when the model has no KAN layers or is already deployed.
+    """
+    if not any(sp.ffn == "kan" for sp in cfg.layer_specs()):
+        return params
+    spec = cfg.kan_spec
+    changed = False
+    new_stages = []
+    for st_params, stage in zip(params["stages"], stages_for(cfg)):
+        blk = dict(st_params)
+        for i, sp in enumerate(stage.block):
+            if sp.ffn != "kan":
+                continue
+            lp = dict(blk[f"l{i}"])
+            if isinstance(lp["kan"], kan.DeployedKAN):
+                continue
+            if stage.repeats == 1:
+                lp["kan"] = kan.deploy(lp["kan"], spec)
+            else:
+                lp["kan"] = jax.vmap(
+                    lambda p: kan.deploy(p, spec))(lp["kan"])
+            blk[f"l{i}"] = lp
+            changed = True
+        new_stages.append(blk)
+    if not changed:
+        return params
+    return {**params, "stages": new_stages}

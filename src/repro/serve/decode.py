@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import kan
 from repro.dist.sharding import shard
 from repro.models import attention as attn_lib
 from repro.models import layers, moe as moe_lib, rglru as rglru_lib
@@ -168,9 +169,9 @@ def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
         x = x + y
     elif spec.ffn == "kan":
         xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
-        from repro.core import kan_layer
-        x = x + kan_layer.apply_kan_ffn(p["kan"], xn, cfg.kan_cfg
-                                        ).astype(x.dtype)
+        # DeployedKAN subtrees (tfm.deploy_kan) run the frozen integer
+        # artifact; raw param trees run the float training path.
+        x = x + kan.apply_any(p["kan"], xn, cfg.kan_spec).astype(x.dtype)
     return x, new_cache
 
 
@@ -288,10 +289,8 @@ def _prefill_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
         y, _ = moe_lib.apply_moe(p["moe"], xn, cfg.moe_cfg)
         x = x + y
     elif spec.ffn == "kan":
-        from repro.core import kan_layer
         xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
-        x = x + kan_layer.apply_kan_ffn(p["kan"], xn, cfg.kan_cfg
-                                        ).astype(x.dtype)
+        x = x + kan.apply_any(p["kan"], xn, cfg.kan_spec).astype(x.dtype)
     return x, new_cache
 
 

@@ -22,6 +22,10 @@ Design
   and their cache rows are fully rewritten at the next admission.
 * **Eviction** — a slot frees on EOS or when the request's ``max_new``
   budget is spent; the next queued request is admitted on the same tick.
+* **KAN deploy-once** — KAN-FFN architectures are served against frozen
+  ``core.kan.DeployedKAN`` artifacts built at engine construction
+  (``tfm.deploy_kan``): int8 coefficient codes, per-output-channel scales
+  and the SH-LUT are quantized/built exactly once, never inside a tick.
 
 Exactness
 ---------
@@ -44,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import kan
 from repro.dist import sharding as shlib
 from repro.models import transformer as tfm
 from repro.models.transformer import ModelConfig
@@ -100,7 +105,12 @@ class Engine:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  max_len: int, queue: Optional[AdmissionQueue] = None,
                  eos_id: Optional[int] = None, enc_len: int = 0):
-        self.params = params
+        # KAN-FFN archs serve frozen integer artifacts: deploy() runs
+        # EXACTLY ONCE here, so the prefill/decode hot paths contain no
+        # coefficient quantization or LUT construction (pinned by
+        # core.kan.trace_requantizes in tests and benchmarks/bench_serve).
+        self.params = tfm.deploy_kan(params, cfg)
+        self.kan_deployed = kan.contains_deployed(self.params)
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len

@@ -52,7 +52,7 @@ def test_quantized_close_to_float(trained):
     cfg, params, _, _, val, _ = trained
     x = jnp.asarray(val.observed)
     y_q = cf_kan.apply(params, x, cfg, qat=True)
-    cfg_ref = dataclasses.replace(cfg, impl="ref")
+    cfg_ref = dataclasses.replace(cfg, backend="ref")
     y_f = cf_kan.apply(params, x, cfg_ref)
     rel = float(jnp.linalg.norm(y_q - y_f) / jnp.linalg.norm(y_f))
     assert rel < 0.15, rel
