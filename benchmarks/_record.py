@@ -1,0 +1,29 @@
+"""Shared append-only benchmark-record loader (bench_serve, bench_chip).
+
+One copy of the clobber protection: a fresh ``{schema, history: []}`` ONLY
+when the file does not exist; an existing-but-unreadable or wrong-schema
+record fails loudly, because overwriting it would silently destroy the
+perf trajectory that benchmarks/records_check.py gates CI on.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def load_history_record(path: str, schema: str) -> dict:
+    if not os.path.exists(path):
+        return {"schema": schema, "history": []}
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except ValueError as e:
+        raise SystemExit(f"{path} exists but is not valid JSON ({e}); "
+                         "refusing to overwrite the perf history — fix or "
+                         "remove the file explicitly")
+    if rec.get("schema") != schema or not isinstance(rec.get("history"),
+                                                     list):
+        raise SystemExit(f"{path} exists with unexpected schema "
+                         f"{rec.get('schema')!r}; refusing to overwrite the "
+                         "perf history — fix or remove the file explicitly")
+    return rec

@@ -1,7 +1,8 @@
-"""Kernel-level microbench: the four KAN backends (ref / lut / fused / cim)
-through the unified ``kan.deploy()`` → ``kan.apply()`` contract — one sweep,
-one API, artifacts frozen once outside the timed region (CPU interpret
-timings; TPU perf is assessed structurally via §Roofline — EXPERIMENTS.md).
+"""Kernel-level microbench: the six KAN backends (ref / lut / lut_int8 /
+fused / cim / cim_tiled) through the unified ``kan.deploy()`` →
+``kan.apply()`` contract — one sweep, one API, artifacts frozen once
+outside the timed region (CPU interpret timings; TPU perf is assessed
+structurally via §Roofline — EXPERIMENTS.md).
 """
 import dataclasses
 import time
@@ -10,7 +11,7 @@ import jax
 
 from repro.core import kan
 from repro.core.quant import ASPConfig
-from repro.hw import cim
+from repro.hw import chip, cim, tiles
 
 
 def _time(fn, *args, n=5):
@@ -35,17 +36,25 @@ def run(emit):
                + i * asp.n_basis * o * 4 + b * o * 4)
     hbm_fused = (b * i * 4 + i * asp.n_basis * o   # int8 coeffs
                  + b * o * 4)
+    n_tiles = -(-(i * asp.n_basis) // 256)
     derived = {
         "ref": f"flops={flops}",
         "lut": f"hbm_bytes={hbm_lut}",
+        "lut_int8": (f"hbm_bytes={hbm_lut // 4 + o * 4};"
+                     "accum=int32;dequant_after_contraction=1"),
         "fused": (f"hbm_bytes={hbm_fused};traffic_reduction="
                   f"{hbm_lut / hbm_fused:.1f}x"),
-        "cim": f"arrays={-(-(i * asp.n_basis) // 256)};bit_slices=8",
+        "cim": f"arrays={n_tiles};bit_slices=8",
+        "cim_tiled": f"row_tiles={n_tiles};bit_slices=8;psum=int32",
     }
-    for backend in ("ref", "lut", "fused", "cim"):
-        dspec = dataclasses.replace(
-            spec, backend=backend,
-            cim=cim.CIMConfig(array_size=256) if backend == "cim" else None)
+    cim_cfgs = {
+        "cim": cim.CIMConfig(array_size=256),
+        "cim_tiled": chip.ChipConfig(
+            tile=tiles.TileConfig(array_size=256, tile_cols=128)),
+    }
+    for backend in ("ref", "lut", "lut_int8", "fused", "cim", "cim_tiled"):
+        dspec = dataclasses.replace(spec, backend=backend,
+                                    cim=cim_cfgs.get(backend))
         deployed = kan.deploy(params, dspec)      # artifact frozen ONCE
         fn = jax.jit(lambda xx, d=deployed: kan.apply(d, xx))
         t = _time(fn, x)

@@ -25,8 +25,11 @@ RESULTS_PATH = os.path.join(os.path.dirname(__file__),
                             "../results/BENCH_serve.json")
 SCHEMA = "bench_serve/v1"
 # one attn + one ssd arch, plus the KAN-FFN arch exercising the core.kan
-# deploy()/apply() contract (its row carries the requant-free proof)
-DEFAULT_ARCHS = ["mistral_nemo_12b", "mamba2_1p3b", "kan_llm"]
+# deploy()/apply() contract (its row carries the requant-free proof) on
+# both KAN serving backends — lut vs lut_int8 rows record the int8-MXU
+# decode-throughput delta
+DEFAULT_ARCHS = ["mistral_nemo_12b", "mamba2_1p3b", "kan_llm",
+                 "kan_llm_int8"]
 
 
 def _decode_tick_requant_free(eng, cfg) -> bool:
@@ -91,24 +94,9 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
 
 
 def load_record(path: str) -> dict:
-    """Load the append-only record; a fresh history ONLY when the file does
-    not exist. An existing-but-unreadable record fails loudly — overwriting
-    it would silently destroy the perf trajectory records_check protects."""
-    if not os.path.exists(path):
-        return {"schema": SCHEMA, "history": []}
-    try:
-        with open(path) as f:
-            rec = json.load(f)
-    except ValueError as e:
-        raise SystemExit(f"{path} exists but is not valid JSON ({e}); "
-                         "refusing to overwrite the perf history — fix or "
-                         "remove the file explicitly")
-    if rec.get("schema") != SCHEMA or not isinstance(rec.get("history"),
-                                                     list):
-        raise SystemExit(f"{path} exists with unexpected schema "
-                         f"{rec.get('schema')!r}; refusing to overwrite the "
-                         "perf history — fix or remove the file explicitly")
-    return rec
+    """Append-only record loader (shared clobber protection)."""
+    from benchmarks._record import load_history_record
+    return load_history_record(path, SCHEMA)
 
 
 def main(argv=None) -> None:

@@ -16,6 +16,10 @@ Checks
   flags consistent with the entry-level flag, the KAN-FFN arch present,
   and its row proving the deploy-once contract (``kan_deployed`` +
   ``requant_free``).
+* ``results/BENCH_chip.json`` — schema ``bench_chip/v1``, append-only
+  history, and for the latest entry: one row per (As, mapping) cell of the
+  requested sweep (no silently-missing cells), every row ``ok`` with sane
+  Monte-Carlo fields, and the Fig. 18 trend flag recorded.
 * ``results/dryrun/*.json`` — the ``smoke`` flag must agree with the
   ``__smoke`` filename convention (report.py labels smoke records).
 
@@ -32,6 +36,7 @@ from typing import List
 
 KERNELS_SCHEMA = "bench_kernels/v1"
 SERVE_SCHEMA = "bench_serve/v1"
+CHIP_SCHEMA = "bench_chip/v1"
 EXPECTED_KERNEL_MODULES = {
     "benchmarks.bench_asp_haq", "benchmarks.bench_input_gen",
     "benchmarks.bench_kan_sam", "benchmarks.bench_scale",
@@ -41,10 +46,15 @@ KERNEL_ROW_KEYS = {"module", "name", "us_per_call", "derived"}
 SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
                   "completed", "requests_per_s", "tokens_per_s",
                   "mean_occupancy", "slot_reuse", "ticks"}
-# the CI serving sweep must include the KAN-FFN arch: its row proves the
-# deploy-once contract (kan_deployed) and the requant-free decode tick
-REQUIRED_SERVE_ARCHS = {"mistral_nemo_12b", "mamba2_1p3b", "kan_llm"}
+# the CI serving sweep must include the KAN-FFN arch on BOTH serving
+# backends (lut + the int8-MXU lut_int8): each row proves the deploy-once
+# contract (kan_deployed) and the requant-free decode tick, and the pair
+# records the int8 throughput delta
+REQUIRED_SERVE_ARCHS = {"mistral_nemo_12b", "mamba2_1p3b", "kan_llm",
+                        "kan_llm_int8"}
 KAN_SERVE_ROW_KEYS = {"kan_deployed", "kan_backend", "requant_free"}
+CHIP_ROW_KEYS = {"As", "sam", "ok", "mean_rel_err", "std", "ci95",
+                 "n_seeds", "values", "tiles_used", "utilization"}
 
 
 def _load(path: str, problems: List[str]):
@@ -93,18 +103,18 @@ def check_kernels(path: str, problems: List[str]) -> None:
                         f"(silently-missing cells)")
 
 
-def check_serve(path: str, problems: List[str]) -> None:
-    rec = _load(path, problems)
-    if rec is None:
-        return
-    if rec.get("schema") != SERVE_SCHEMA:
+def _check_history(rec, schema: str, path: str, problems: List[str]):
+    """Shared append-only-history validation (serve + chip records):
+    schema match, non-empty history, numeric monotone timestamps. Returns
+    the latest entry, or None when structurally unusable."""
+    if rec.get("schema") != schema:
         problems.append(f"{path}: schema {rec.get('schema')!r} != "
-                        f"{SERVE_SCHEMA!r}")
-        return
+                        f"{schema!r}")
+        return None
     history = rec.get("history")
     if not isinstance(history, list) or not history:
         problems.append(f"{path}: empty or missing history")
-        return
+        return None
     last_ts = None
     for i, entry in enumerate(history):
         ts = entry.get("ts")
@@ -115,7 +125,16 @@ def check_serve(path: str, problems: List[str]) -> None:
             problems.append(f"{path}: history not monotonically appended "
                             f"(entry {i}: ts {ts} < {last_ts})")
         last_ts = ts
-    entry = history[-1]
+    return history[-1]
+
+
+def check_serve(path: str, problems: List[str]) -> None:
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    entry = _check_history(rec, SERVE_SCHEMA, path, problems)
+    if entry is None:
+        return
     rows = entry.get("rows") or []
     expected = set(entry.get("archs") or [])
     got = {row.get("arch") for row in rows}
@@ -162,6 +181,47 @@ def check_serve(path: str, problems: List[str]) -> None:
                     f"requant_free={row['requant_free']!r})")
 
 
+def check_chip(path: str, problems: List[str]) -> None:
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    entry = _check_history(rec, CHIP_SCHEMA, path, problems)
+    if entry is None:
+        return
+    rows = entry.get("rows") or []
+    sweep = entry.get("as_sweep") or []
+    expected = {(a, sam) for a in sweep for sam in (False, True)}
+    got = {(row.get("As"), row.get("sam")) for row in rows}
+    if expected - got:
+        problems.append(f"{path}: latest entry missing cells "
+                        f"{sorted(expected - got)} (silently-missing "
+                        "As x mapping cells)")
+    if "trend_ok" not in entry:
+        problems.append(f"{path}: latest entry records no trend_ok flag")
+    for row in rows:
+        cell = f"(As={row.get('As')}, sam={row.get('sam')})"
+        if row.get("ok") is not True:
+            problems.append(f"{path}: cell {cell} not ok: "
+                            f"{row.get('error', 'no error recorded')}")
+            continue
+        missing = CHIP_ROW_KEYS - set(row)
+        if missing:
+            problems.append(f"{path}: cell {cell} missing keys "
+                            f"{sorted(missing)}")
+            continue
+        err = row["mean_rel_err"]
+        if not (isinstance(err, (int, float)) and err >= 0):
+            problems.append(f"{path}: cell {cell} has bad mean_rel_err "
+                            f"{err!r}")
+        util = row["utilization"]
+        if not (isinstance(util, (int, float)) and 0 < util <= 1):
+            problems.append(f"{path}: cell {cell} has bad utilization "
+                            f"{util!r} (mapper conservation: 0 < util <= 1)")
+        if len(row["values"]) != row["n_seeds"]:
+            problems.append(f"{path}: cell {cell} has {len(row['values'])} "
+                            f"values for n_seeds={row['n_seeds']}")
+
+
 def check_dryrun(dirpath: str, problems: List[str]) -> None:
     for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
         rec = _load(path, problems)
@@ -184,6 +244,7 @@ def main(argv=None) -> None:
     problems: List[str] = []
     check_kernels(os.path.join(root, "BENCH_kernels.json"), problems)
     check_serve(os.path.join(root, "BENCH_serve.json"), problems)
+    check_chip(os.path.join(root, "BENCH_chip.json"), problems)
     check_dryrun(os.path.join(root, "dryrun"), problems)
 
     if problems:
@@ -193,7 +254,8 @@ def main(argv=None) -> None:
             print(f"  - {p}", file=sys.stderr)
         raise SystemExit(1)
     print(f"records-check OK: {root}/BENCH_kernels.json, "
-          f"{root}/BENCH_serve.json, {root}/dryrun/*.json")
+          f"{root}/BENCH_serve.json, {root}/BENCH_chip.json, "
+          f"{root}/dryrun/*.json")
 
 
 if __name__ == "__main__":

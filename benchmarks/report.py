@@ -45,6 +45,31 @@ def dryrun_table():
               f"{_gib(tmp)} | {coll_s} |")
 
 
+def chip_table():
+    recs = _load("BENCH_chip.json")
+    if not recs or not recs[0].get("history"):
+        return
+    entry = recs[0]["history"][-1]
+    smoke = " (smoke)" if entry.get("smoke") else ""
+    print(f"\n### Chip-level variation Monte-Carlo{smoke} — Fig. 18 "
+          f"(gamma0={entry.get('gamma0')}, sigma_cell="
+          f"{entry.get('sigma_cell')}, {len(entry.get('seeds', []))} "
+          "chip seeds)\n")
+    print("| As | mapping | rel MAC err (mean ± 95% CI) | tiles used | "
+          "utilization |")
+    print("|---|---|---|---|---|")
+    for r in entry.get("rows", []):
+        mapping = "KAN-SAM" if r.get("sam") else "uniform"
+        if not r.get("ok"):
+            print(f"| {r.get('As')} | {mapping} | FAIL "
+                  f"{r.get('error', '')[:60]} | | |")
+            continue
+        print(f"| {r['As']} | {mapping} | {r['mean_rel_err']:.4f} ± "
+              f"{r['ci95']:.4f} | {r['tiles_used']} | "
+              f"{r['utilization']:.2f} |")
+    print(f"\ntrend_ok: {entry.get('trend_ok')}")
+
+
 def roofline_table():
     rows = [r for r in _load("roofline/*.json") if r.get("ok")]
     print("\n### Roofline baseline (per-chip, v5e constants; loop-corrected"
@@ -75,5 +100,6 @@ def perf_table():
 
 if __name__ == "__main__":
     dryrun_table()
+    chip_table()
     roofline_table()
     perf_table()

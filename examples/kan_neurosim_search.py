@@ -47,7 +47,7 @@ def val_loss(params, asp):
 
 
 def extend(params, old, new):
-    return {k: grid_extension.extend_kan_layer(v, old, new)
+    return {k: grid_extension.extend_layer_params(v, old, new)
             for k, v in params.items()}
 
 

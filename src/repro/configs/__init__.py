@@ -24,10 +24,12 @@ ARCH_IDS = [
 
 # Servable extras: registry archs that are NOT part of the assigned
 # published-architecture matrix (no dry-run cells, no hyperparameter-table
-# row) but are first-class for launch.serve / bench_serve — currently the
-# KAN-FFN LLM that exercises the core.kan deploy()/apply() contract.
+# row) but are first-class for launch.serve / bench_serve — the KAN-FFN
+# LLM that exercises the core.kan deploy()/apply() contract, on the f32
+# `lut` backend and the int32-accumulating `lut_int8` (int8-MXU) backend.
 AUX_ARCH_IDS = [
     "kan_llm",
+    "kan_llm_int8",
 ]
 
 

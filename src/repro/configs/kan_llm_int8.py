@@ -1,0 +1,29 @@
+"""KAN-FFN LLM on the int8-MXU backend (``lut_int8``): the same serving
+vehicle as ``kan_llm`` but the expanded-basis contraction stays integer end
+to end — int8 basis codes × int8 coefficient codes with int32 accumulation,
+one f32 scale multiply after the contraction. Its ``bench_serve`` row
+records the decode-throughput delta against the f32-dequant ``lut`` row
+(the ROADMAP's int8-MXU open item) and carries the same deploy-once /
+requant-free proof fields.
+"""
+import dataclasses
+
+from repro.configs import ArchConfig
+from repro.configs.kan_llm import CONFIG as _LUT_CONFIG
+from repro.configs.kan_llm import SMOKE as _LUT_SMOKE
+
+
+def _int8(model, name):
+    return dataclasses.replace(model, name=name, kan_backend="lut_int8")
+
+
+CONFIG = ArchConfig(
+    model=_int8(_LUT_CONFIG.model, "kan-llm-30m-int8"),
+    optimizer="adamw", learning_rate=3e-4,
+    notes="kan_llm served on the lut_int8 (int8-MXU) backend: int8 E x "
+          "int8 C with int32 accumulation, no f32 dequant before the "
+          "contraction")
+
+SMOKE = ArchConfig(
+    model=_int8(_LUT_SMOKE.model, "kan-llm-smoke-int8"),
+    optimizer="adamw", learning_rate=3e-4)

@@ -45,8 +45,8 @@ def extend_coeffs(coeffs: Array, asp_old: ASPConfig, asp_new: ASPConfig) -> Arra
     return jnp.einsum("ts,iso->ito", m.astype(coeffs.dtype), coeffs)
 
 
-def extend_kan_layer(params: Dict[str, Array], asp_old: ASPConfig,
-                     asp_new: ASPConfig) -> Dict[str, Array]:
+def extend_layer_params(params: Dict[str, Array], asp_old: ASPConfig,
+                        asp_new: ASPConfig) -> Dict[str, Array]:
     out = dict(params)
     out["coeffs"] = extend_coeffs(params["coeffs"], asp_old, asp_new)
     return out

@@ -7,14 +7,21 @@ program the crossbar → serve frozen integer artifacts. This module is the
 * **KANSpec** — one static description of a KAN stack (a single layer, an
   FFN, or the CF-KAN autoencoder), subsuming the legacy
   ``KANLayerConfig``/``KANFFNConfig`` pair.
-* **register_backend(name)** — the deployment axis. Four built-ins:
+* **register_backend(name)** — the deployment axis. Six built-ins:
     - ``ref``   : float Cox–de Boor oracle (accuracy ground truth),
     - ``lut``   : ASP-KAN-HAQ quantized expanded-basis matmul on the MXU
                   (the ACIM-faithful dataflow; previously ``baseline``),
+    - ``lut_int8``: int8 expanded basis × int8 codes with int32
+                  accumulation end to end — no f32 dequant before the
+                  contraction (the ROADMAP's int8-MXU backend),
     - ``fused`` : Pallas TPU kernel — quantize → SH-LUT → expand → contract
                   fused in VMEM,
     - ``cim``   : bit-sliced RRAM crossbar simulator with optional KAN-SAM
-                  row mapping (previously a private pipeline in cf_kan).
+                  row mapping (previously a private pipeline in cf_kan),
+    - ``cim_tiled``: multi-tile ACIM chip simulator (hw.tiles/chip) —
+                  per-tile IR drop/ADC/variation, int32 digital partial-sum
+                  reduction, empty-row compaction + within-tile KAN-SAM
+                  (``spec.cim`` holds a ``hw.chip.ChipConfig``).
 * **deploy(params, spec, stats=None) → DeployedKAN** — compile-time artifact
   construction, done ONCE: int8 coefficient codes + per-output-channel
   scales, the SH-LUT, the bit-sliced programming image, and the KAN-SAM row
@@ -29,8 +36,9 @@ program the crossbar → serve frozen integer artifacts. This module is the
   (pinned in tests/test_kan_backends.py).
 
 Extending: subclass ``KANBackend`` and decorate with
-``@register_backend("my-backend")`` — e.g. an int8-MXU backend or a
-multi-tile CIM model lands here without touching any call site.
+``@register_backend("my-backend")`` — the ``lut_int8`` int8-MXU backend
+and the ``cim_tiled`` chip simulator landed exactly this way, without
+touching any call site.
 """
 from __future__ import annotations
 
@@ -81,8 +89,9 @@ class KANSpec:
     bound_input: bool = True        # tanh-bound inputs into the knot range
     dtype: Any = jnp.float32
     layer_names: Tuple[str, ...] = ()
-    # cim backend only: crossbar config + KAN-SAM mapping toggle
-    cim: Any = None                 # Optional[repro.hw.cim.CIMConfig]
+    # cim/cim_tiled backends only: crossbar config + KAN-SAM mapping toggle
+    # (cim takes a hw.cim.CIMConfig, cim_tiled a hw.chip.ChipConfig)
+    cim: Any = None
     use_sam: bool = False
 
     def __post_init__(self):
@@ -162,8 +171,8 @@ def _layer_stats(stats, spec: KANSpec, i: int):
 
 
 # ---------------------------------------------------------------------------
-# Shared math primitives (single source of truth; the legacy kan_layer shim
-# and every backend below build on these).
+# Shared math primitives (single source of truth; every backend below
+# builds on these).
 # ---------------------------------------------------------------------------
 
 def bound_input(x: Array, asp: ASPConfig) -> Array:
@@ -227,10 +236,13 @@ class DeployedLayer:
     atten: Optional[Array] = None   # [R] f32 row attenuation (cim)
     row_order: Optional[Array] = None  # [R] int32 phys-of-logical (KAN-SAM)
     slices: Optional[Array] = None  # [I, S, O, 8] uint8 bit-slices (cim)
+    hemi_q: Optional[Array] = None  # [ceil(L/2), K+1] int8 SH-LUT (lut_int8)
+    tiles: Optional[Any] = None     # hw.chip.TiledLayer (cim_tiled)
 
     def tree_flatten(self):
         return ((self.codes, self.scale, self.hemi, self.w_base,
-                 self.atten, self.row_order, self.slices), None)
+                 self.atten, self.row_order, self.slices, self.hemi_q,
+                 self.tiles), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -268,9 +280,13 @@ class KANBackend:
     name = "?"
 
     def deploy_extras(self, codes: Array, scale: Array, lspec: KANLayerShape,
-                      spec: KANSpec, stats) -> Dict[str, Array]:
-        """Backend-specific artifact fields (keys of DeployedLayer)."""
-        del codes, scale, lspec, spec, stats
+                      spec: KANSpec, stats, *,
+                      layer_idx: int = 0) -> Dict[str, Array]:
+        """Backend-specific artifact fields (keys of DeployedLayer).
+        ``layer_idx`` is a chip-unique layer id (``chip_uid * n_layers +
+        layer``, possibly traced — cim_tiled folds it into the per-tile
+        process-variation draw so no two physical layers share one)."""
+        del codes, scale, lspec, spec, stats, layer_idx
         return {}
 
     def run(self, layer: DeployedLayer, lspec: KANLayerShape, spec: KANSpec,
@@ -348,6 +364,34 @@ class LutBackend(KANBackend):
                 ).astype(x.dtype)
 
 
+@register_backend("lut_int8")
+class LutInt8Backend(KANBackend):
+    """int8-MXU: the expanded-basis contraction stays integer END TO END —
+    int8 basis codes (deploy-time-quantized SH-LUT taps, the WL-DAC view)
+    × int8 coefficient codes with int32 accumulation; ONE f32 multiply
+    after the contraction folds the coefficient scale and the basis LSB.
+    Same artifact as ``lut`` plus the int8 SH-LUT; differs from ``lut`` by
+    basis-quantization error only (≤ 0.5/127 per tap)."""
+
+    def deploy_extras(self, codes, scale, lspec, spec, stats, *,
+                      layer_idx=0):
+        hemi = quant.hemi_for(lspec.asp)
+        return {"hemi_q": quant.quantize_hemi(hemi)}
+
+    def run(self, layer, lspec, spec, x, rng=None):
+        basis = quant.quantized_basis(x, layer.hemi_q, lspec.asp)  # int8
+        lead = basis.shape[:-2]
+        ik = basis.shape[-2] * basis.shape[-1]
+        e = basis.reshape(lead + (ik,))
+        c = layer.codes.reshape(ik, -1)
+        acc = jax.lax.dot_general(                      # int8 x int8 -> int32
+            e, c, (((e.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        y = acc.astype(jnp.float32) * (
+            layer.scale.reshape(-1).astype(jnp.float32) * quant.HEMI_LSB)
+        return y.astype(x.dtype)
+
+
 @register_backend("fused")
 class FusedBackend(KANBackend):
     """Pallas TPU kernel: quantize → SH-LUT → expand → MXU contract fused in
@@ -379,7 +423,8 @@ class CimBackend(KANBackend):
         from repro.hw import cim as cim_lib
         return spec.cim if spec.cim is not None else cim_lib.CIMConfig()
 
-    def deploy_extras(self, codes, scale, lspec, spec, stats):
+    def deploy_extras(self, codes, scale, lspec, spec, stats, *,
+                      layer_idx=0):
         from repro.core import kan_sam
         from repro.hw import cim as cim_lib
         ccfg = self._cim_cfg(spec)
@@ -408,6 +453,58 @@ class CimBackend(KANBackend):
         w = layer.codes.reshape(lspec.n_rows, lspec.out_dim)
         y = cim_lib.cim_forward(v, w, ccfg, atten_of_logical=layer.atten,
                                 rng=rng)
+        return y * layer.scale.reshape(-1)
+
+
+@register_backend("cim_tiled")
+class CimTiledBackend(KANBackend):
+    """Multi-tile ACIM chip simulator (hw.tiles / hw.chip).
+
+    Deploy runs the chip mapper: empty-row compaction across tiles,
+    within-tile KAN-SAM criticality placement (``spec.use_sam`` + Phase-A
+    stats), the per-tile int8 programming images, and the deterministic
+    per-``(seed, layer, tile)`` process-variation gains — all frozen into
+    the artifact's ``TiledLayer``. Run gathers word lines into physical
+    order and reduces per-tile ADC readouts through the int32 digital
+    adder tree (Pallas kernel on the deterministic path). Like ``cim``,
+    training falls back to the fake-quant LUT path.
+    """
+
+    def _chip_cfg(self, spec):
+        from repro.hw import chip as chip_lib
+        if spec.cim is None:
+            return chip_lib.ChipConfig()
+        if not isinstance(spec.cim, chip_lib.ChipConfig):
+            raise TypeError(
+                "the cim_tiled backend takes spec.cim = hw.chip.ChipConfig "
+                f"(got {type(spec.cim).__name__}); wrap a TileConfig in "
+                "ChipConfig(tile=...)")
+        return spec.cim
+
+    def deploy_extras(self, codes, scale, lspec, spec, stats, *,
+                      layer_idx=0):
+        from repro.core import kan_sam
+        from repro.hw import chip as chip_lib
+        ccfg = self._chip_cfg(spec)
+        crit = None
+        if spec.use_sam:
+            if stats is None:
+                raise ValueError(
+                    "KAN-SAM deploy needs Phase-A BasisStats: pass "
+                    "deploy(params, spec, stats=...) with one entry per "
+                    "layer name")
+            crit = kan_sam.criticality(stats, codes).reshape(-1)
+        tiled = chip_lib.place_layer(codes, crit, ccfg, layer_uid=layer_idx)
+        return {"tiles": tiled, "row_order": tiled.phys_of_logical}
+
+    def run(self, layer, lspec, spec, x, rng=None):
+        from repro.hw import chip as chip_lib
+        ccfg = self._chip_cfg(spec)
+        basis = quant.quantized_basis(x, layer.hemi, lspec.asp)
+        lead = basis.shape[:-2]
+        v = basis.reshape(lead + (lspec.n_rows,))
+        y = chip_lib.chip_forward(v, layer.tiles, ccfg, lspec.out_dim,
+                                  rng=rng)
         return y * layer.scale.reshape(-1)
 
 
@@ -442,12 +539,18 @@ def init(key: Array, spec: KANSpec):
             for i, name in enumerate(names)}
 
 
-def deploy(params, spec: KANSpec, stats=None) -> DeployedKAN:
+def deploy(params, spec: KANSpec, stats=None, *, chip_uid=0) -> DeployedKAN:
     """Phase 1 — compile-time artifact construction (run ONCE per serving
     lifetime): quantize coefficients to int8 codes + per-output-channel
     scales (``quantize_coeffs(..., axis=(0, 1))``), build the SH-LUT, and
     let the backend attach its extras (cim: bit-slices + KAN-SAM
     row order/attenuation from Phase-A ``stats``).
+
+    ``chip_uid`` distinguishes multiple KAN stacks deployed onto one
+    simulated chip (e.g. every KAN-FFN block of a transformer): cim_tiled
+    folds ``chip_uid * n_layers + layer`` into its process-variation key,
+    so distinct physical layers draw distinct per-cell variation. It may
+    be a traced int32 scalar (vmapped stacked-stage deploys pass an iota).
 
     Idempotent: an already-deployed artifact passes through unchanged.
     """
@@ -462,11 +565,13 @@ def deploy(params, spec: KANSpec, stats=None) -> DeployedKAN:
         codes, scale = quant.quantize_coeffs(coeffs, lspec.asp, axis=(0, 1))
         hemi = quant.hemi_for(lspec.asp)
         extras = backend.deploy_extras(codes, scale, lspec, spec,
-                                       _layer_stats(stats, spec, i))
+                                       _layer_stats(stats, spec, i),
+                                       layer_idx=chip_uid * spec.n_layers + i)
         layers.append(DeployedLayer(
             codes=codes, scale=scale.astype(jnp.float32), hemi=hemi,
             w_base=lp.get("w_base"), atten=extras.get("atten"),
-            row_order=extras.get("row_order"), slices=extras.get("slices")))
+            row_order=extras.get("row_order"), slices=extras.get("slices"),
+            hemi_q=extras.get("hemi_q"), tiles=extras.get("tiles")))
     return DeployedKAN(tuple(layers), spec)
 
 

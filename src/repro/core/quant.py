@@ -224,6 +224,21 @@ def dequantize_coeffs(codes: Array, scale: Array) -> Array:
     return codes.astype(jnp.float32) * scale
 
 
+# int8 SH-LUT for the lut_int8 (int8-MXU) backend: cardinal taps live in
+# [0, 1], so a single fixed LSB of 1/127 quantizes the whole table. Built at
+# DEPLOY time; the serving hot path only gathers the frozen int8 taps, so
+# the expanded basis is minted as int8 with no float dequantization before
+# the int32-accumulating contraction.
+HEMI_LSB = 1.0 / 127.0
+
+
+def quantize_hemi(hemi: Array) -> Array:
+    """f32 SH-LUT [ceil(L/2), K+1] -> int8 codes (dequant = codes*HEMI_LSB).
+    ``sh_lut_lookup``/``basis_from_taps`` preserve the int8 dtype, so the
+    basis vector itself is an int8 tensor of these codes."""
+    return jnp.round(hemi / HEMI_LSB).astype(jnp.int8)
+
+
 def bit_slices(codes: Array) -> Array:
     """Alg. 1 Phase B: int8 magnitude -> 8 binary slices (MSB..LSB).
 

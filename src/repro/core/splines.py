@@ -130,8 +130,9 @@ def basis_from_taps(seg: Array, taps: Array, grid_size: int, order: int) -> Arra
     i = jnp.arange(n_basis, dtype=jnp.int32)
     t = i - seg[..., None]  # [..., G+K]; tap index for each basis slot
     out = jnp.zeros(taps.shape[:-1] + (n_basis,), dtype=taps.dtype)
+    zero = jnp.zeros((), dtype=taps.dtype)  # keep int8 taps int8 (lut_int8)
     for tap in range(order + 1):
-        out = out + jnp.where(t == tap, taps[..., tap:tap + 1], 0.0)
+        out = out + jnp.where(t == tap, taps[..., tap:tap + 1], zero)
     return out
 
 

@@ -54,9 +54,12 @@ def row_attenuation(n_rows: int, cfg: CIMConfig) -> Array:
     """Attenuation of each physical row position, nearest-clamp first.
 
     Positions repeat per physical array: row r sits at d = r % As.
+    Floored at 0: a resistive bit-line attenuates a row's contribution to
+    nothing at worst — it can never invert its sign — so aggressive
+    (gamma > 1) corners saturate far rows to dead instead of subtracting.
     """
     d = jnp.arange(n_rows) % cfg.array_size
-    return 1.0 - cfg.gamma() * (d + 1.0) / cfg.array_size
+    return jnp.maximum(1.0 - cfg.gamma() * (d + 1.0) / cfg.array_size, 0.0)
 
 
 def quantize_wl(v: Array, bits: int, v_max: float = 1.0) -> Array:

@@ -1,0 +1,171 @@
+"""Multi-tile ACIM crossbar math (the paper's large-array scaling story).
+
+``hw.cim`` models ONE monolithic array: logical rows wrap around a single
+``As``-row bit-line (``d = r % As``) and partial sums recombine in float.
+Real chips provision a *grid* of fixed ``As × Cc`` crossbar tiles and reduce
+the per-tile readouts digitally — that chip-level dataflow lives here:
+
+* ``TileConfig`` — one physical tile: ``As`` rows on a bit-line, ``Cc``
+  bit-line column groups, WL-DAC / ADC resolution, IR-drop ``gamma``.
+* ``grid_shape`` / ``pack_image`` — partition the expanded coefficient
+  matrix ``[R, O]`` into a ``[Tr, Tc]`` grid of per-tile programming images.
+* ``readout_codes`` — the per-row-tile DIGITAL partial sums: per tile,
+  IR-drop attenuation (reset at every tile boundary: each tile has its own
+  clamp), optional per-cell conductance variation, bit-sliced analog sums,
+  per-tile ADC readout, shift-and-add recombination → one int32 code per
+  (row-tile, output column).
+* ``tiled_mac`` — the full chip MAC: codes reduced across row-tiles by an
+  int32 digital adder tree, scaled back to the analog domain once at the
+  end. Backed by the Pallas kernel (``kernels.cim_mac.cim_mac_tiled``) on
+  the deterministic path; the jnp reference here is the bit-exact oracle
+  and carries the stochastic readout-noise path.
+
+Numerics note: the ADC quantizes each column's analog sum per tile, so only
+the ROW tiling (``As``) affects results; ``Cc`` partitions ADCs/area and
+enters the chip mapper (``hw.chip``) and the cost roll-up, not the math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.hw import cim as cim_lib
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    """One physical crossbar tile. Field semantics (and defaults) match the
+    monolithic ``cim.CIMConfig`` so an ideal tiled chip degenerates to it;
+    ``tile_cols`` is new — the bit-line column groups per tile."""
+    array_size: int = 256          # rows per tile (As)
+    tile_cols: int = 64            # output columns per tile (Cc)
+    adc_bits: int = 8
+    gamma0: float = cim_lib.GAMMA0_DEFAULT
+    sigma_psum: float = 0.3        # per-tile readout noise std (LSB units)
+    input_bits: int = 8            # WL DAC resolution
+    adc_in_scale: float = 0.2      # ADC full-scale = adc_in_scale * As
+
+    def gamma(self) -> float:
+        return self.gamma0 * self.array_size / 128.0
+
+    @property
+    def lsb(self) -> float:
+        fs = float(self.array_size) * self.adc_in_scale
+        return fs / float(2 ** self.adc_bits - 1)
+
+    def as_cim(self) -> cim_lib.CIMConfig:
+        """The monolithic-array view of this tile (parity tests)."""
+        return cim_lib.CIMConfig(
+            array_size=self.array_size, adc_bits=self.adc_bits,
+            gamma0=self.gamma0, sigma_psum=self.sigma_psum,
+            input_bits=self.input_bits, adc_in_scale=self.adc_in_scale)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def grid_shape(n_rows: int, n_cols: int, cfg: TileConfig) -> Tuple[int, int]:
+    """(Tr, Tc) tile-grid dims covering an [n_rows, n_cols] matrix."""
+    return _ceil_div(n_rows, cfg.array_size), _ceil_div(n_cols, cfg.tile_cols)
+
+
+def slot_attenuation(n_slots: int, cfg: TileConfig) -> Array:
+    """IR-drop attenuation of each physical slot. Resets at every tile
+    boundary — each tile has its own clamping circuit — so slot s sits at
+    in-tile distance ``d = s % As``. Delegates to the monolithic model
+    (``cim.row_attenuation``) so the tiled and single-array physics can
+    never diverge (the ideal-tiled == monolithic parity test relies on
+    this)."""
+    return cim_lib.row_attenuation(n_slots, cfg.as_cim())
+
+
+def pack_image(w_phys: Array, cfg: TileConfig) -> Array:
+    """[Rp, Op] physical codes -> [Tr, Tc, As, Cc] per-tile programming
+    images (what gets written into each tile). Rp/Op must be tile multiples
+    (the mapper pads). Inverse: ``unpack_image``."""
+    rp, op = w_phys.shape
+    tr, tc = rp // cfg.array_size, op // cfg.tile_cols
+    img = w_phys.reshape(tr, cfg.array_size, tc, cfg.tile_cols)
+    return img.transpose(0, 2, 1, 3)
+
+
+def unpack_image(image: Array, cfg: TileConfig) -> Array:
+    """[Tr, Tc, As, Cc] -> [Rp, Op] flat physical matrix."""
+    tr, tc = image.shape[0], image.shape[1]
+    flat = image.transpose(0, 2, 1, 3)
+    return flat.reshape(tr * cfg.array_size, tc * cfg.tile_cols)
+
+
+def readout_codes(v_phys: Array, w_phys: Array, cfg: TileConfig, *,
+                  gain: Optional[Array] = None,
+                  rng: Optional[Array] = None) -> Array:
+    """Per-row-tile digital readout codes (the jnp oracle).
+
+    v_phys: [..., Rp] word-line values in PHYSICAL row order (already
+      WL-DAC quantized); Rp % As == 0.
+    w_phys: [Rp, Op] int8 physical codes; gain: optional [Rp, Op] per-cell
+      conductance multipliers (process variation, ``hw.variation``).
+    rng: optional key — pre-ADC Gaussian readout noise per (tile, bit-slice)
+      with std ``sigma_psum`` LSBs, the per-tile analog of the monolithic
+      model's Gaussian closure.
+
+    Returns [..., Tr, Op] int32: each row-tile's shift-and-add recombined
+    ADC codes. ``sum(axis=-2) * cfg.lsb`` is the chip output.
+    """
+    rp = v_phys.shape[-1]
+    op = w_phys.shape[-1]
+    tr = rp // cfg.array_size
+    lead = v_phys.shape[:-1]
+
+    att = slot_attenuation(rp, cfg)
+    va = (v_phys.astype(jnp.float32) * att).reshape(
+        lead + (tr, cfg.array_size))
+    w = w_phys.astype(jnp.int32)
+    mag = jnp.abs(w)
+    sgn = jnp.sign(w).astype(jnp.float32)
+    g = 1.0 if gain is None else gain.astype(jnp.float32)
+
+    lsb = cfg.lsb
+    codes = jnp.zeros(lead + (tr, op), dtype=jnp.int32)
+    for k in range(8):
+        bit = ((mag >> k) & 1).astype(jnp.float32) * sgn * g   # [Rp, Op]
+        ws = bit.reshape(tr, cfg.array_size, op)
+        psum = jnp.einsum("...ta,tac->...tc", va, ws)
+        if rng is not None:
+            noise = jax.random.normal(jax.random.fold_in(rng, k),
+                                      psum.shape, dtype=jnp.float32)
+            psum = psum + cfg.sigma_psum * lsb * noise
+        codes = codes + (1 << k) * jnp.round(psum / lsb).astype(jnp.int32)
+    return codes
+
+
+def tiled_mac(v_phys: Array, w_phys: Array, cfg: TileConfig, *,
+              gain: Optional[Array] = None, rng: Optional[Array] = None,
+              use_kernel: bool = True) -> Array:
+    """Full multi-tile MAC: per-tile readouts reduced across row-tiles by
+    the int32 digital adder tree, then scaled to analog units once.
+
+    v_phys: [..., Rp] physical-order WL values, w_phys: [Rp, Op] int8.
+    Returns [..., Op] float32 ~= v @ w with per-tile analog error.
+
+    The deterministic path (``rng is None``) runs the Pallas kernel
+    (``ops.cim_mac_tiled`` — int32 accumulator walks row-tiles as the inner
+    grid dim); the stochastic path and the oracle run the jnp reference.
+    """
+    if use_kernel and rng is None:
+        from repro.kernels import ops  # lazy: hw stays importable w/o pallas
+        acc = ops.cim_mac_tiled(v_phys, w_phys,
+                                slot_attenuation(v_phys.shape[-1], cfg),
+                                gain=gain, array_size=cfg.array_size,
+                                adc_bits=cfg.adc_bits,
+                                in_scale=cfg.adc_in_scale)
+    else:
+        codes = readout_codes(v_phys, w_phys, cfg, gain=gain, rng=rng)
+        acc = codes.sum(axis=-2, dtype=jnp.int32)
+    return acc.astype(jnp.float32) * cfg.lsb

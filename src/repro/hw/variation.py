@@ -1,0 +1,111 @@
+"""Process-variation sampling + Monte-Carlo harness (paper §4.C, Fig. 18).
+
+The paper evaluates accuracy under *measured* TSMC-22nm statistics: every
+programmed RRAM cell's conductance deviates from its target by a relative
+dispersion (device-to-device variation), and the evaluation repeats over
+chip instances to report degradation with confidence. This module is that
+methodology:
+
+* ``VariationConfig`` — relative per-cell conductance sigma (0 = ideal
+  chip) with tail truncation (conductance cannot go negative, and measured
+  distributions are bounded).
+* ``tile_gain`` / ``grid_gain`` — DETERMINISTIC per-cell multipliers drawn
+  per ``(seed, layer, tile)``: each tile folds its own id into the chip-lot
+  key, so the draw for tile (tr, tc) is identical whether tiles are
+  sampled one-by-one, in any order, vmapped over the grid, or inside jit —
+  pinned by tests/test_chip.py. Two seeds = two chip instances.
+* ``monte_carlo`` / ``sweep_array_size`` — the Fig.-18 harness: evaluate a
+  metric over chip seeds and report mean / std / 95% CI per array size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Relative conductance dispersion of a programmed cell — the order of the
+# measured TSMC-22nm device-to-device statistics the paper cites [13][14].
+DEFAULT_SIGMA = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class VariationConfig:
+    sigma: float = 0.0     # relative per-cell conductance std; 0 = ideal
+    clip: float = 3.0      # truncate draws at +/- clip sigmas
+    seed: int = 0          # chip-lot seed; one seed = one chip instance
+
+    def with_seed(self, seed: int) -> "VariationConfig":
+        return dataclasses.replace(self, seed=seed)
+
+
+def tile_gain(cfg: VariationConfig, layer_uid: int, tr, tc,
+              shape) -> Array:
+    """Per-cell conductance multipliers for ONE tile, [As, Cc].
+
+    The key is ``fold_in(fold_in(fold_in(lot, layer), tr), tc)`` — a pure
+    function of ids, so the draw is independent of sampling order and of
+    jit/vmap tracing context. tr/tc may be traced int32 scalars.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    key = jax.random.fold_in(key, layer_uid)
+    key = jax.random.fold_in(jax.random.fold_in(key, tr), tc)
+    eps = jnp.clip(jax.random.normal(key, shape, dtype=jnp.float32),
+                   -cfg.clip, cfg.clip)
+    return jnp.maximum(1.0 + cfg.sigma * eps, 0.0)
+
+
+def grid_gain(cfg: VariationConfig, layer_uid: int, n_tr: int, n_tc: int,
+              array_size: int, tile_cols: int) -> Array:
+    """All tiles of one layer's grid: [Tr, Tc, As, Cc] multipliers —
+    bitwise equal to calling ``tile_gain`` per tile in any order."""
+    trs = jnp.arange(n_tr, dtype=jnp.int32)
+    tcs = jnp.arange(n_tc, dtype=jnp.int32)
+    per_row = jax.vmap(
+        lambda a: jax.vmap(
+            lambda b: tile_gain(cfg, layer_uid, a, b,
+                                (array_size, tile_cols)))(tcs))
+    return per_row(trs)
+
+
+# ---------------------------------------------------------------------------
+# Monte-Carlo harness
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MCStats:
+    """Sample statistics of one Monte-Carlo cell."""
+    values: tuple
+    mean: float
+    std: float
+    ci95: float          # 1.96 * std / sqrt(n) — normal-approx half-width
+    n: int
+
+
+def monte_carlo(eval_fn: Callable[[int], float],
+                seeds: Sequence[int]) -> MCStats:
+    """Evaluate ``eval_fn(seed)`` per chip instance and summarize."""
+    vals = [float(eval_fn(int(s))) for s in seeds]
+    n = len(vals)
+    mean = float(np.mean(vals))
+    std = float(np.std(vals, ddof=1)) if n > 1 else 0.0
+    return MCStats(values=tuple(vals), mean=mean, std=std,
+                   ci95=1.96 * std / math.sqrt(n) if n > 1 else 0.0, n=n)
+
+
+def sweep_array_size(make_eval: Callable[[int], Callable[[int], float]],
+                     array_sizes: Sequence[int],
+                     seeds: Sequence[int]) -> List[Dict]:
+    """Fig.-18 x-axis: ``make_eval(As)`` returns the per-seed metric fn;
+    one row of {As, mean, std, ci95, n, values} per array size."""
+    rows = []
+    for a in array_sizes:
+        st = monte_carlo(make_eval(int(a)), seeds)
+        rows.append({"As": int(a), "mean": st.mean, "std": st.std,
+                     "ci95": st.ci95, "n": st.n, "values": list(st.values)})
+    return rows

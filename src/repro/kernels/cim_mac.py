@@ -64,6 +64,83 @@ def _cim_mac_kernel(v_ref, w_ref, att_ref, out_ref, acc_ref, *,
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _cim_mac_tiled_kernel(v_ref, w_ref, g_ref, att_ref, out_ref, acc_ref, *,
+                          n_tiles: int, adc_bits: int, array_size: int,
+                          in_scale: float):
+    """Multi-tile variant (hw.tiles): the grid walks ROW-TILES as the inner
+    contraction dim; each tile's 8 bit-slice sums are ADC-read and
+    shift-and-add recombined into an int32 code, and tiles reduce through
+    an int32 scratch accumulator — the digital partial-sum adder tree. A
+    per-cell conductance gain (process variation, hw.variation) multiplies
+    each bit-slice. Output is the raw int32 code sum; the caller applies
+    the single LSB scale (tiles.tiled_mac)."""
+    tr = pl.program_id(2)
+
+    @pl.when(tr == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    v = v_ref[...].astype(jnp.float32)                 # [bm, As]
+    att = att_ref[...].astype(jnp.float32)             # [1, As]
+    va = v * att                                       # per-tile IR drop
+    w = w_ref[...].astype(jnp.int32)                   # [As, bc]
+    g = g_ref[...].astype(jnp.float32)                 # [As, bc]
+    mag = jnp.abs(w)
+    sgn = jnp.sign(w).astype(jnp.float32)
+
+    fs = float(array_size) * in_scale
+    lsb = fs / float(2 ** adc_bits - 1)
+
+    acc = acc_ref[...]
+    for k in range(8):
+        bit = ((mag >> k) & 1).astype(jnp.float32) * sgn * g
+        psum = jax.lax.dot(va, bit, preferred_element_type=jnp.float32)
+        code = jnp.round(psum / lsb).astype(jnp.int32)  # per-tile ADC readout
+        acc = acc + (1 << k) * code
+    acc_ref[...] = acc
+
+    @pl.when(tr == n_tiles - 1)
+    def _finalize():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("array_size", "adc_bits", "in_scale", "block_b",
+                     "block_c", "interpret"))
+def cim_mac_tiled(v: Array, w_codes: Array, gain: Array, row_atten: Array, *,
+                  array_size: int, adc_bits: int = 8, in_scale: float = 1.0,
+                  block_b: int = 128, block_c: int = 128,
+                  interpret: bool = False) -> Array:
+    """v: [B, R] float, w_codes/gain: [R, C] int8/float, row_atten: [1, R].
+
+    R % array_size == 0, B % block_b == 0, C % block_c == 0 (ops.py pads).
+    Returns [B, C] int32 — the digitally reduced readout codes.
+    """
+    b, r = v.shape
+    c = w_codes.shape[1]
+    n_tiles = r // array_size
+    kernel = functools.partial(
+        _cim_mac_tiled_kernel, n_tiles=n_tiles, adc_bits=adc_bits,
+        array_size=array_size, in_scale=in_scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b, c // block_c, n_tiles),
+        in_specs=[
+            pl.BlockSpec((block_b, array_size), lambda bb, cc, aa: (bb, aa)),
+            pl.BlockSpec((array_size, block_c), lambda bb, cc, aa: (aa, cc)),
+            pl.BlockSpec((array_size, block_c), lambda bb, cc, aa: (aa, cc)),
+            pl.BlockSpec((1, array_size), lambda bb, cc, aa: (0, aa)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda bb, cc, aa: (bb, cc)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.int32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(v, w_codes, gain, row_atten)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("array_size", "adc_bits", "in_scale", "block_b",

@@ -151,6 +151,44 @@ def cim_mac(v: Array, w_codes: Array, row_atten: Array, *,
     return y[:b, :c].reshape(lead + (c,))
 
 
+def cim_mac_tiled(v: Array, w_codes: Array, row_atten: Array, *,
+                  gain: Optional[Array] = None, array_size: int,
+                  adc_bits: int = 8, in_scale: float = 1.0) -> Array:
+    """Padded wrapper for the multi-tile ACIM MAC kernel (hw.tiles).
+
+    v: [..., R] float PHYSICAL-order WL values, w_codes: [R, C] int8,
+    row_atten: [R] float, gain: optional [R, C] per-cell conductance
+    multipliers. R must already be a tile multiple (the chip mapper pads
+    rows); batch and columns are padded here. Returns [..., C] int32 —
+    the digitally reduced per-tile readout codes (caller scales by LSB).
+    """
+    lead = v.shape[:-1]
+    r = v.shape[-1]
+    c = w_codes.shape[-1]
+    if r % array_size:
+        raise ValueError(f"R={r} not a multiple of array_size={array_size} "
+                         "(the chip mapper pads rows to whole tiles)")
+    vf = v.reshape(-1, r)
+    b = vf.shape[0]
+
+    block_b = min(128, _round_up(b, 8))
+    block_c = min(128, _round_up(c, 128))
+    bp, cp = _round_up(b, block_b), _round_up(c, block_c)
+
+    vp = jnp.pad(vf.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    wp = jnp.pad(w_codes, ((0, 0), (0, cp - c)))
+    if gain is None:
+        gain = jnp.ones((r, c), dtype=jnp.float32)
+    gp = jnp.pad(gain.astype(jnp.float32), ((0, 0), (0, cp - c)))
+    ap = row_atten.astype(jnp.float32).reshape(1, r)
+
+    y = _cim.cim_mac_tiled(vp, wp, gp, ap, array_size=array_size,
+                           adc_bits=adc_bits, in_scale=in_scale,
+                           block_b=block_b, block_c=block_c,
+                           interpret=_interpret_default())
+    return y[:b, :c].reshape(lead + (c,))
+
+
 # ---------------------------------------------------------------------------
 # Chunked SSD (Mamba-2) kernel
 # ---------------------------------------------------------------------------

@@ -628,6 +628,9 @@ def deploy_kan(params, cfg: ModelConfig):
     spec = cfg.kan_spec
     changed = False
     new_stages = []
+    n_blocks = 0  # chip-unique uid per KAN block: the cim_tiled backend
+    #               draws per-(layer, tile) process variation from it, so
+    #               no two physical FFN blocks share a variation draw
     for st_params, stage in zip(params["stages"], stages_for(cfg)):
         blk = dict(st_params)
         for i, sp in enumerate(stage.block):
@@ -635,12 +638,17 @@ def deploy_kan(params, cfg: ModelConfig):
                 continue
             lp = dict(blk[f"l{i}"])
             if isinstance(lp["kan"], kan.DeployedKAN):
+                n_blocks += stage.repeats
                 continue
             if stage.repeats == 1:
-                lp["kan"] = kan.deploy(lp["kan"], spec)
+                lp["kan"] = kan.deploy(lp["kan"], spec, chip_uid=n_blocks)
             else:
+                uids = n_blocks + jnp.arange(stage.repeats,
+                                             dtype=jnp.int32)
                 lp["kan"] = jax.vmap(
-                    lambda p: kan.deploy(p, spec))(lp["kan"])
+                    lambda p, u: kan.deploy(p, spec, chip_uid=u))(
+                        lp["kan"], uids)
+            n_blocks += stage.repeats
             blk[f"l{i}"] = lp
             changed = True
         new_stages.append(blk)

@@ -1,0 +1,360 @@
+"""repro.hw.chip / tiles / variation + the cim_tiled and lut_int8 backends.
+
+The acceptance seams of the chip-level subsystem:
+* ideal-config tiled forward == monolithic ``cim`` backend, with the
+  per-tile partial-sum codes pinned BITWISE (Pallas kernel == jnp oracle);
+* variation sampler deterministic across jit / vmap / tile orderings;
+* mapper conservation: every logical row placed exactly once, empty rows
+  compacted across tiles, utilization <= 1;
+* within-tile KAN-SAM reduces chip error at large As (Fig. 18 recovery);
+* both new backends serve through the engine unchanged (deploy-once,
+  requant-free decode jaxpr);
+* ``lut_int8``: int8 x int8 -> int32 contraction pinned at the jaxpr level
+  (no f32 dequant before the contraction).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import kan, kan_sam, quant
+from repro.core.quant import ASPConfig
+from repro.hw import chip, cim, tiles, variation
+from repro.kernels import ops
+from repro.models import transformer as tfm
+from repro.serve import engine as engine_lib
+
+
+def _setup(b=32, i=16, o=8, g=8, seed=0, x_std=0.35):
+    spec = kan.KANSpec.single(i, o, ASPConfig(grid_size=g))
+    key = jax.random.PRNGKey(seed)
+    params = kan.init(key, spec)
+    x = jnp.clip(jax.random.normal(jax.random.fold_in(key, 1), (b, i))
+                 * x_std, -0.999, 0.999)
+    return spec, params, x
+
+
+def _stats_for(spec, x):
+    asp = spec.asp[0]
+    return kan_sam.update_stats(kan_sam.init_stats(spec.dims[0], asp),
+                                kan.bound_input(x, asp), asp)
+
+
+# ---------------------------------------------------------------------------
+# tiled forward == monolithic cim
+# ---------------------------------------------------------------------------
+
+def test_ideal_tiled_forward_matches_monolithic_cim():
+    """Same As / ADC / IR-drop, no variation, no compaction: the tile grid
+    degenerates to the monolithic array. Partial sums are identical integer
+    codes; outputs differ only by f32-vs-int32 accumulation order."""
+    spec, params, x = _setup(i=24, o=20, g=7)
+    tile = tiles.TileConfig(array_size=64, tile_cols=16, gamma0=0.1)
+    dep_t = kan.deploy(params, spec.with_backend(
+        "cim_tiled", cim=chip.ChipConfig(tile=tile, compact=False)))
+    dep_m = kan.deploy(params, spec.with_backend("cim", cim=tile.as_cim()))
+    y_t = kan.apply(dep_t, x)
+    y_m = kan.apply(dep_m, x)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_m),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(y_t).max()) > 0  # not trivially zero
+
+
+def test_tiled_kernel_codes_bitwise_vs_oracle():
+    """The Pallas kernel's int32 digitally-reduced codes == the jnp oracle's
+    per-tile readout codes summed over row tiles — BITWISE."""
+    key = jax.random.PRNGKey(3)
+    tile = tiles.TileConfig(array_size=32, tile_cols=16, gamma0=0.15)
+    v = jax.random.uniform(key, (9, 96))          # 3 row tiles, ragged batch
+    w = jax.random.randint(jax.random.fold_in(key, 1), (96, 20), -127, 128,
+                           dtype=jnp.int8)
+    gain = variation.grid_gain(
+        variation.VariationConfig(sigma=0.08, seed=5), 0, 3, 2, 32, 16)
+    gain_flat = tiles.unpack_image(gain, tile)[:, :20]
+    codes = tiles.readout_codes(v, w, tile, gain=gain_flat)
+    assert codes.shape == (9, 3, 20) and codes.dtype == jnp.int32
+    kernel = ops.cim_mac_tiled(v, w, tiles.slot_attenuation(96, tile),
+                               gain=gain_flat, array_size=32,
+                               adc_bits=tile.adc_bits,
+                               in_scale=tile.adc_in_scale)
+    np.testing.assert_array_equal(np.asarray(kernel),
+                                  np.asarray(codes.sum(axis=-2)))
+    # tiled_mac = codes * lsb through either path
+    y = tiles.tiled_mac(v, w, tile, gain=gain_flat)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(codes.sum(axis=-2) * tile.lsb), rtol=1e-6)
+
+
+def test_ideal_chip_matches_lut_backend():
+    """Fine DAC/ADC, zero IR drop, zero variation: the chip is the ideal
+    integer MAC — matches the lut backend like IDEAL_CIM does."""
+    spec, params, x = _setup()
+    tile = tiles.TileConfig(array_size=64, tile_cols=32, adc_bits=16,
+                            gamma0=0.0, sigma_psum=0.0, input_bits=16)
+    dep = kan.deploy(params, spec.with_backend(
+        "cim_tiled", cim=chip.ChipConfig(tile=tile)))
+    y = kan.apply(dep, x)
+    y_lut = kan.apply(kan.deploy(params, spec.with_backend("lut")), x)
+    rel = float(jnp.linalg.norm(y - y_lut) / jnp.linalg.norm(y_lut))
+    assert rel < 5e-3, rel
+
+
+# ---------------------------------------------------------------------------
+# variation sampler
+# ---------------------------------------------------------------------------
+
+def test_variation_deterministic_across_jit_vmap_and_order():
+    cfg = variation.VariationConfig(sigma=0.07, seed=11)
+    grid = variation.grid_gain(cfg, 2, 3, 2, 16, 8)
+    assert grid.shape == (3, 2, 16, 8)
+    # per-tile draws in shuffled order match the grid slices
+    for tr, tc in [(2, 1), (0, 0), (1, 1), (2, 0), (0, 1), (1, 0)]:
+        np.testing.assert_array_equal(
+            np.asarray(variation.tile_gain(cfg, 2, tr, tc, (16, 8))),
+            np.asarray(grid[tr, tc]))
+    # under jit the DRAWS are identical; the affine transform may fuse
+    # differently (1-ulp FMA), so pin to float tolerance not bits
+    jit_grid = jax.jit(lambda: variation.grid_gain(cfg, 2, 3, 2, 16, 8))()
+    np.testing.assert_allclose(np.asarray(jit_grid), np.asarray(grid),
+                               rtol=1e-6, atol=1e-7)
+    # distinct tiles / layers / seeds draw distinct variation
+    assert not np.array_equal(np.asarray(grid[0, 0]), np.asarray(grid[1, 0]))
+    assert not np.array_equal(
+        np.asarray(variation.tile_gain(cfg, 3, 0, 0, (16, 8))),
+        np.asarray(grid[0, 0]))
+    assert not np.array_equal(
+        np.asarray(variation.tile_gain(cfg.with_seed(12), 2, 0, 0, (16, 8))),
+        np.asarray(grid[0, 0]))
+    # physically sane: positive, centered near 1
+    assert float(grid.min()) >= 0.0
+    assert abs(float(grid.mean()) - 1.0) < 0.01
+
+
+def test_monte_carlo_stats():
+    st = variation.monte_carlo(lambda s: float(s), [1, 2, 3, 4])
+    assert st.n == 4 and st.mean == pytest.approx(2.5)
+    assert st.ci95 == pytest.approx(1.96 * st.std / 2.0)
+    rows = variation.sweep_array_size(
+        lambda a: (lambda s: a + s), [128, 256], [0, 1])
+    assert [r["As"] for r in rows] == [128, 256]
+    assert rows[1]["mean"] == pytest.approx(256.5)
+
+
+# ---------------------------------------------------------------------------
+# mapper conservation
+# ---------------------------------------------------------------------------
+
+def _placement_invariants(tiled, r):
+    lof = np.asarray(tiled.logical_of_phys)
+    valid = np.asarray(tiled.valid)
+    pol = np.asarray(tiled.phys_of_logical)
+    placed = lof[valid]
+    # every live logical row occupies exactly one physical slot
+    assert len(placed) == len(set(placed.tolist()))
+    for logical in placed:
+        assert lof[pol[logical]] == logical
+    return placed
+
+
+def test_mapper_places_every_row_once_and_compacts_empty():
+    spec, params, x = _setup(i=16, o=8, g=8)
+    codes, _ = quant.quantize_coeffs(
+        params["coeffs"].astype(jnp.float32), spec.asp[0], axis=(0, 1))
+    # kill a third of the rows -> empty (all-zero codes) rows to compact
+    r = 16 * spec.asp[0].n_basis
+    kill = np.zeros(r, dtype=bool)
+    kill[np.random.RandomState(0).choice(r, r // 3, replace=False)] = True
+    codes = jnp.where(jnp.asarray(kill).reshape(16, -1, 1), 0, codes)
+    ccfg = chip.ChipConfig(tile=tiles.TileConfig(array_size=32, tile_cols=8))
+
+    tiled = chip.place_layer(codes, None, ccfg)
+    placed = _placement_invariants(tiled, r)
+    n_live = int((~np.asarray((codes == 0).all(axis=-1)).reshape(-1)).sum())
+    assert len(placed) == n_live          # conservation: all live rows
+    # compaction: live rows pack to the front, freeing whole row-tiles
+    assert np.asarray(tiled.valid)[:n_live].all()
+    rep = chip.layer_report(tiled, 8, ccfg)
+    assert rep["rows_placed"] == n_live
+    assert rep["tiles_used"] < rep["tiles_allocated"]
+    assert 0 < rep["utilization"] <= 1
+
+    # without compaction every row keeps its logical slot
+    tiled_id = chip.place_layer(
+        codes, None, dataclasses.replace(ccfg, compact=False))
+    np.testing.assert_array_equal(
+        np.asarray(tiled_id.logical_of_phys)[:r], np.arange(r))
+
+
+def test_mapper_sam_sorts_within_tiles():
+    spec, params, x = _setup(i=16, o=8, g=8)
+    stats = _stats_for(spec, x)
+    codes, _ = quant.quantize_coeffs(
+        params["coeffs"].astype(jnp.float32), spec.asp[0], axis=(0, 1))
+    crit = kan_sam.criticality(stats, codes).reshape(-1)
+    As = 32
+    ccfg = chip.ChipConfig(tile=tiles.TileConfig(array_size=As, tile_cols=8))
+    tiled = chip.place_layer(codes, crit, ccfg)
+    _placement_invariants(tiled, crit.size)
+    lof = np.asarray(tiled.logical_of_phys)
+    valid = np.asarray(tiled.valid)
+    cnp = np.asarray(crit)
+    for t in range(len(lof) // As):
+        slot = slice(t * As, (t + 1) * As)
+        cs = cnp[lof[slot]][valid[slot]]
+        assert (np.diff(cs) <= 1e-6).all()   # descending toward the far end
+    # live slots always precede dead slots inside a tile
+    for t in range(len(lof) // As):
+        v = valid[t * As:(t + 1) * As]
+        assert not (np.diff(v.astype(int)) > 0).any()
+
+
+def test_inventory_cap_raises():
+    spec, params, _ = _setup(i=16, o=8, g=8)
+    codes, _ = quant.quantize_coeffs(
+        params["coeffs"].astype(jnp.float32), spec.asp[0], axis=(0, 1))
+    ccfg = chip.ChipConfig(
+        tile=tiles.TileConfig(array_size=32, tile_cols=8), n_tiles=2)
+    with pytest.raises(ValueError):
+        chip.place_layer(codes, None, ccfg)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 18 mechanism at chip level
+# ---------------------------------------------------------------------------
+
+def test_degradation_grows_with_as_and_sam_recovers():
+    spec, params, x = _setup(b=48, i=48, o=32, g=8)
+    stats = _stats_for(spec, x)
+    y_ideal = kan.apply(kan.deploy(params, spec.with_backend("lut")), x)
+    denom = float(jnp.linalg.norm(y_ideal))
+
+    def err(a, sam):
+        ccfg = chip.ChipConfig(
+            tile=tiles.TileConfig(array_size=a, tile_cols=32, gamma0=0.2))
+        dep = kan.deploy(
+            params, spec.with_backend("cim_tiled", cim=ccfg, use_sam=sam),
+            stats=stats if sam else None)
+        return float(jnp.linalg.norm(kan.apply(dep, x) - y_ideal)) / denom
+
+    uni = [err(a, False) for a in (128, 256, 512)]
+    assert uni == sorted(uni), uni               # monotone in As
+    assert err(512, True) < uni[-1]              # SAM recovery at large As
+
+
+# ---------------------------------------------------------------------------
+# serving contract: cim_tiled + lut_int8 through the engine unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["cim_tiled", "lut_int8"])
+def test_new_backends_serve_through_engine(backend):
+    m = get_arch("kan_llm", smoke=True).model
+    m = dataclasses.replace(m, kan_backend=backend)
+    params = tfm.init_model(jax.random.PRNGKey(0), m)
+    eng = engine_lib.Engine(params, m, n_slots=2, max_len=16)
+    assert eng.kan_deployed
+    tokens = jnp.zeros((2,), jnp.int32)
+    index = jnp.ones((2,), jnp.int32)
+    assert not kan.trace_requantizes(
+        lambda p, c, t, i: engine_lib._decode_fn(p, c, t, i, cfg=m),
+        eng.params, eng.cache, tokens, index)
+    reqs = engine_lib.synth_trace(m.vocab, 4, max_prompt=6, min_prompt=3,
+                                  max_new=4, min_new=2, stagger=1)
+    assert len(eng.run(reqs)) == 4
+
+
+def test_variation_independent_across_blocks_and_stages():
+    """Every physical KAN layer on the chip draws its own variation:
+    distinct chip_uids (transformer blocks / vmapped stacked stages) must
+    not share per-cell gains."""
+    spec, params, _ = _setup(i=16, o=8)
+    ccfg = chip.ChipConfig(
+        tile=tiles.TileConfig(array_size=32, tile_cols=8),
+        variation=variation.VariationConfig(sigma=0.05, seed=0))
+    dspec = spec.with_backend("cim_tiled", cim=ccfg)
+    g0 = kan.deploy(params, dspec, chip_uid=0).layers[0].tiles.gain
+    g1 = kan.deploy(params, dspec, chip_uid=1).layers[0].tiles.gain
+    assert not np.array_equal(np.asarray(g0), np.asarray(g1))
+    # the stacked-stage mechanism deploy_kan uses: vmapped deploy over an
+    # iota of chip_uids -> per-stage gains differ, placement agrees
+    stacked = jax.tree.map(lambda x: jnp.stack([x, x]), params)
+    dep_v = jax.vmap(lambda p, u: kan.deploy(p, dspec, chip_uid=u))(
+        stacked, jnp.arange(2, dtype=jnp.int32))
+    g = np.asarray(dep_v.layers[0].tiles.gain)
+    assert not np.array_equal(g[0], g[1])
+    np.testing.assert_array_equal(
+        np.asarray(dep_v.layers[0].tiles.logical_of_phys[0]),
+        np.asarray(dep_v.layers[0].tiles.logical_of_phys[1]))
+    np.testing.assert_array_equal(np.asarray(g[0]), np.asarray(g0))
+
+
+def test_chip_report_rolls_up_deployed_kan():
+    spec, params, x = _setup(i=24, o=16)
+    ccfg = chip.ChipConfig(
+        tile=tiles.TileConfig(array_size=64, tile_cols=16),
+        variation=variation.VariationConfig(sigma=0.05, seed=1))
+    dep = kan.deploy(params, spec.with_backend("cim_tiled", cim=ccfg))
+    rep = chip.chip_report(dep)
+    assert rep["tiles_used"] <= rep["tiles_allocated"]
+    assert 0 < rep["utilization"] <= 1
+    assert rep["fits_inventory"] and rep["area_mm2"] > 0
+    (layer,) = dep.layers
+    assert layer.tiles.gain is not None          # variation baked at deploy
+    # two chip seeds = two different chips, same placement
+    dep2 = kan.deploy(params, spec.with_backend(
+        "cim_tiled", cim=ccfg.with_seed(2)))
+    np.testing.assert_array_equal(
+        np.asarray(dep.layers[0].tiles.logical_of_phys),
+        np.asarray(dep2.layers[0].tiles.logical_of_phys))
+    assert not np.array_equal(np.asarray(dep.layers[0].tiles.gain),
+                              np.asarray(dep2.layers[0].tiles.gain))
+
+
+# ---------------------------------------------------------------------------
+# lut_int8: integer end to end
+# ---------------------------------------------------------------------------
+
+def test_lut_int8_close_to_lut_and_differentiable():
+    spec, params, x = _setup(b=64, i=32, o=24)
+    dep8 = kan.deploy(params, spec.with_backend("lut_int8"))
+    y8 = kan.apply(dep8, x)
+    y = kan.apply(kan.deploy(params, spec.with_backend("lut")), x)
+    rel = float(jnp.linalg.norm(y8 - y) / jnp.linalg.norm(y))
+    assert rel < 0.02, rel                        # basis-LSB error only
+    assert float(jnp.abs(y8 - y).max()) > 0       # actually quantized
+    (layer,) = dep8.layers
+    assert layer.hemi_q.dtype == jnp.int8
+    # training twin: fake-quant LUT path, finite grads
+    g = jax.grad(lambda p: jnp.sum(kan.train_apply(
+        p, x, spec.with_backend("lut_int8"), qat=True) ** 2))(params)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(g))
+
+
+def _int_dots(fn, *args):
+    """(int8-operand, int32-out) dot_generals in the jaxpr of fn(*args)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    hits = []
+    for eqn in kan._iter_eqns(closed.jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        in_dts = [v.aval.dtype for v in eqn.invars]
+        out_dts = [v.aval.dtype for v in eqn.outvars]
+        hits.append((in_dts, out_dts))
+    return hits
+
+
+def test_lut_int8_contraction_is_integer_end_to_end():
+    """The jaxpr pin for 'no f32 dequant before the contraction': the hot
+    path's only contraction is int8 x int8 -> int32."""
+    spec, params, x = _setup(b=8)
+    spec = dataclasses.replace(spec, base_activation="")   # isolate spline
+    params = {"coeffs": params["coeffs"]}
+    dep = kan.deploy(params, spec.with_backend("lut_int8"))
+    dots = _int_dots(kan.apply, dep, x)
+    assert len(dots) == 1
+    in_dts, out_dts = dots[0]
+    assert all(dt == jnp.int8 for dt in in_dts), in_dts
+    assert out_dts == [jnp.int32], out_dts
+    assert not kan.trace_requantizes(kan.apply, dep, x)

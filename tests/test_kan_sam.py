@@ -107,18 +107,17 @@ def test_sensitivity_grid_assignment_tiers():
 
 def test_sensitivity_profiling_runs():
     """End-to-end Phase 1 on a toy 2-layer KAN stack."""
-    from repro.core import kan_layer
-    from repro.core.kan_layer import KANLayerConfig
+    from repro.core import kan
     key = jax.random.PRNGKey(0)
     asp = ASPConfig(grid_size=5)
-    c1 = KANLayerConfig(8, 8, asp, impl="ref")
-    c2 = KANLayerConfig(8, 4, asp, impl="ref")
-    params = {"a": kan_layer.init_kan_layer(key, c1),
-              "b": kan_layer.init_kan_layer(jax.random.fold_in(key, 1), c2)}
+    s1 = kan.KANSpec.single(8, 8, asp, backend="ref")
+    s2 = kan.KANSpec.single(8, 4, asp, backend="ref")
+    params = {"a": kan.init(key, s1),
+              "b": kan.init(jax.random.fold_in(key, 1), s2)}
 
     def loss(p, x, y):
-        h = kan_layer.apply_kan_layer(p["a"], x, c1)
-        out = kan_layer.apply_kan_layer(p["b"], h, c2)
+        h = kan.train_apply(p["a"], x, s1)
+        out = kan.train_apply(p["b"], h, s2)
         return jnp.mean((out - y) ** 2)
 
     batches = [(jax.random.normal(jax.random.PRNGKey(i), (16, 8)),
