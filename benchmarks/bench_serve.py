@@ -53,6 +53,7 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
     import jax
     from repro.configs import get_arch
     from repro.models import transformer as tfm
+    from repro.obs import EngineRecorder
     from repro.serve.engine import Engine, synth_trace
 
     arch = get_arch(arch_id, smoke=smoke)
@@ -62,16 +63,23 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
         m.vocab, requests, max_prompt=prompt_len,
         min_prompt=max(2, prompt_len // 2), max_new=new_tokens,
         min_new=max(2, new_tokens // 2), stagger=stagger, seed=seed)
-    eng = Engine(params, m, n_slots=slots,
-                 max_len=prompt_len + new_tokens)
     # warm-up run compiles prefill-per-length + the fused tick; the timed
     # run replays the SAME trace on a fresh engine with the warm jit caches,
-    # so it measures steady-state throughput, not compile time.
+    # so it measures steady-state throughput, not compile time. Each engine
+    # gets its own recorder: the warm-up's captures the compile events (one
+    # per distinct prompt length — the row records how many XLA paid for),
+    # the timed one captures steady-state TTFT/TPOT latency percentiles.
+    rec_warm = EngineRecorder()
+    eng = Engine(params, m, n_slots=slots,
+                 max_len=prompt_len + new_tokens, recorder=rec_warm)
     eng.run(reqs)
+    rec_timed = EngineRecorder()
     eng2 = Engine(params, m, n_slots=slots,
-                  max_len=prompt_len + new_tokens).adopt_compiled(eng)
+                  max_len=prompt_len + new_tokens,
+                  recorder=rec_timed).adopt_compiled(eng)
     eng2.run(list(reqs))
     rep = eng2.stats.report()
+    lat = rep["ttft_s"], rep["tpot_s"]
     row = {
         "arch": arch_id, "family": m.family, "smoke": smoke, "ok": True,
         "n_slots": slots, "requests": requests,
@@ -83,6 +91,19 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
         "ticks": rep["ticks"],
         "evicted_eos": rep["evicted_eos"],
         "evicted_length": rep["evicted_length"],
+        # steady-state latency percentiles (seconds, warm jit caches)
+        "ttft_p50_s": lat[0]["p50"], "ttft_p95_s": lat[0]["p95"],
+        "ttft_p99_s": lat[0]["p99"],
+        "tpot_p50_s": lat[1]["p50"], "tpot_p95_s": lat[1]["p95"],
+        "tpot_p99_s": lat[1]["p99"],
+        # compile cost the warm-up run paid (one prefill per distinct
+        # prompt length + the fused tick + the cache write)
+        "prefill_compiles": sum(
+            1 for e in rec_warm.compile_events
+            if e.name.startswith("prefill")),
+        "compiles_total": len(rec_warm.compile_events),
+        "compile_s": round(sum(e.wall_s for e in rec_warm.compile_events),
+                           3),
     }
     if eng2.kan_deployed:
         # the KAN-FFN row proves the two-phase contract: artifacts frozen

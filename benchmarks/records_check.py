@@ -22,6 +22,12 @@ Checks
   Monte-Carlo fields, and the Fig. 18 trend flag recorded.
 * ``results/dryrun/*.json`` — the ``smoke`` flag must agree with the
   ``__smoke`` filename convention (report.py labels smoke records).
+* ``--trace FILE`` / ``--metrics FILE`` (optional) — validate an emitted
+  Chrome ``trace_event`` JSON (from ``launch.serve --trace-out``) and an
+  ``obs/v1`` metrics snapshot (``--metrics-out``): event schema, a
+  begin/end-paired request lifecycle, TTFT/TPOT histograms with
+  observations, and at least one recorded prefill compile event. The CI
+  serving-smoke step runs with both flags and gates on this.
 
 Exit status is non-zero with a list of problems on any violation.
 """
@@ -45,7 +51,16 @@ EXPECTED_KERNEL_MODULES = {
 KERNEL_ROW_KEYS = {"module", "name", "us_per_call", "derived"}
 SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
                   "completed", "requests_per_s", "tokens_per_s",
-                  "mean_occupancy", "slot_reuse", "ticks"}
+                  "mean_occupancy", "slot_reuse", "ticks",
+                  # latency percentiles + compile accounting (obs layer):
+                  # fresh rows must carry them — an engine run without the
+                  # recorder would silently ship None columns
+                  "ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+                  "tpot_p50_s", "tpot_p95_s", "tpot_p99_s",
+                  "prefill_compiles", "compiles_total", "compile_s"}
+SERVE_LATENCY_KEYS = ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
+                      "tpot_p50_s", "tpot_p95_s", "tpot_p99_s")
+OBS_SCHEMA = "obs/v1"
 # the CI serving sweep must include the KAN-FFN arch on BOTH serving
 # backends (lut + the int8-MXU lut_int8): each row proves the deploy-once
 # contract (kan_deployed) and the requant-free decode tick, and the pair
@@ -168,6 +183,24 @@ def check_serve(path: str, problems: List[str]) -> None:
             v = row[k]
             if not (isinstance(v, (int, float)) and v > 0):
                 problems.append(f"{path}: row {arch!r} has bad {k} {v!r}")
+        for k in SERVE_LATENCY_KEYS:
+            v = row[k]
+            if not (isinstance(v, (int, float)) and v > 0):
+                problems.append(f"{path}: row {arch!r} has bad latency "
+                                f"percentile {k} {v!r} (did the bench run "
+                                "without a recorder?)")
+        if all(isinstance(row[k], (int, float)) for k in SERVE_LATENCY_KEYS):
+            for fam in ("ttft", "tpot"):
+                p50, p95, p99 = (row[f"{fam}_p50_s"], row[f"{fam}_p95_s"],
+                                 row[f"{fam}_p99_s"])
+                if not (p50 <= p95 <= p99):
+                    problems.append(f"{path}: row {arch!r} {fam} "
+                                    f"percentiles not monotone: "
+                                    f"{p50} / {p95} / {p99}")
+        if not (isinstance(row["prefill_compiles"], int)
+                and row["prefill_compiles"] >= 1):
+            problems.append(f"{path}: row {arch!r} records no prefill "
+                            f"compiles ({row['prefill_compiles']!r})")
         if "kan" in arch:
             missing_kan = KAN_SERVE_ROW_KEYS - set(row)
             if missing_kan:
@@ -222,6 +255,91 @@ def check_chip(path: str, problems: List[str]) -> None:
                             f"values for n_seeds={row['n_seeds']}")
 
 
+def check_trace(path: str, problems: List[str]) -> None:
+    """Validate a Chrome trace_event JSON emitted by ``--trace-out``."""
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    events = rec.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        problems.append(f"{path}: no traceEvents array")
+        return
+    begins, ends = {}, {}
+    phases_seen = set()
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph not in {"X", "i", "b", "e", "M"}:
+            problems.append(f"{path}: event {i} has unknown phase {ph!r}")
+            continue
+        if "name" not in ev or "pid" not in ev:
+            problems.append(f"{path}: event {i} ({ph}) missing name/pid")
+            continue
+        if ph != "M":
+            ts = ev.get("ts")
+            if not (isinstance(ts, (int, float)) and ts >= 0):
+                problems.append(f"{path}: event {i} ({ph} {ev['name']!r}) "
+                                f"has bad ts {ts!r}")
+        if ph == "X":
+            phases_seen.add(ev["name"])
+            if not isinstance(ev.get("dur"), (int, float)):
+                problems.append(f"{path}: X event {i} {ev['name']!r} has "
+                                f"no numeric dur")
+        elif ph == "b":
+            begins.setdefault((ev.get("cat"), ev.get("id")), 0)
+            begins[(ev.get("cat"), ev.get("id"))] += 1
+        elif ph == "e":
+            ends.setdefault((ev.get("cat"), ev.get("id")), 0)
+            ends[(ev.get("cat"), ev.get("id"))] += 1
+    missing_phases = {"decode", "prefill", "admit"} - phases_seen
+    if missing_phases:
+        problems.append(f"{path}: no span for engine tick phases "
+                        f"{sorted(missing_phases)}")
+    if not begins:
+        problems.append(f"{path}: no request lifecycle (async 'b') events")
+    unbalanced = {k for k in begins if begins[k] != ends.get(k, 0)}
+    if unbalanced:
+        problems.append(f"{path}: unbalanced async begin/end for "
+                        f"{sorted(str(k) for k in unbalanced)[:4]}")
+
+
+def check_obs_metrics(path: str, problems: List[str]) -> None:
+    """Validate an obs/v1 metrics snapshot emitted by ``--metrics-out``."""
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    if rec.get("schema") != OBS_SCHEMA:
+        problems.append(f"{path}: schema {rec.get('schema')!r} != "
+                        f"{OBS_SCHEMA!r}")
+        return
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        problems.append(f"{path}: empty or missing metrics")
+        return
+    for name in ("serve_ttft_seconds", "serve_tpot_seconds"):
+        h = metrics.get(name)
+        if h is None:
+            problems.append(f"{path}: missing histogram {name!r}")
+            continue
+        if h.get("kind") != "histogram" or not h.get("count"):
+            problems.append(f"{path}: {name!r} is not a non-empty "
+                            f"histogram: {h.get('kind')}/{h.get('count')}")
+        elif any(h.get(p) is None for p in ("p50", "p95", "p99")):
+            problems.append(f"{path}: {name!r} has no percentiles")
+    prefill_compiles = [k for k, v in metrics.items()
+                        if k.startswith('compile_total{fn="prefill')
+                        and v.get("value", 0) >= 1]
+    if not prefill_compiles:
+        problems.append(f"{path}: no prefill compile counters (the engine "
+                        "compiles one prefill per distinct prompt length — "
+                        "a recorded run must show at least one)")
+    compiles = rec.get("compiles")
+    if not isinstance(compiles, list) or not compiles:
+        problems.append(f"{path}: no compile events recorded")
+    elif not all(isinstance(e.get("wall_s"), (int, float)) and
+                 e.get("wall_s", -1) >= 0 for e in compiles):
+        problems.append(f"{path}: compile events with bad wall_s")
+
+
 def check_dryrun(dirpath: str, problems: List[str]) -> None:
     for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
         rec = _load(path, problems)
@@ -238,6 +356,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(
         os.path.dirname(__file__), "../results"))
+    ap.add_argument("--trace", default="",
+                    help="also validate a Chrome trace JSON emitted by "
+                         "launch.serve --trace-out")
+    ap.add_argument("--metrics", default="",
+                    help="also validate an obs/v1 metrics snapshot emitted "
+                         "by launch.serve --metrics-out")
     args = ap.parse_args(argv)
     root = os.path.normpath(args.results)
 
@@ -246,6 +370,10 @@ def main(argv=None) -> None:
     check_serve(os.path.join(root, "BENCH_serve.json"), problems)
     check_chip(os.path.join(root, "BENCH_chip.json"), problems)
     check_dryrun(os.path.join(root, "dryrun"), problems)
+    if args.trace:
+        check_trace(args.trace, problems)
+    if args.metrics:
+        check_obs_metrics(args.metrics, problems)
 
     if problems:
         print(f"records-check FAILED ({len(problems)} problems):",
@@ -253,9 +381,10 @@ def main(argv=None) -> None:
         for p in problems:
             print(f"  - {p}", file=sys.stderr)
         raise SystemExit(1)
+    extra = "".join(f", {p}" for p in (args.trace, args.metrics) if p)
     print(f"records-check OK: {root}/BENCH_kernels.json, "
           f"{root}/BENCH_serve.json, {root}/BENCH_chip.json, "
-          f"{root}/dryrun/*.json")
+          f"{root}/dryrun/*.json{extra}")
 
 
 if __name__ == "__main__":

@@ -70,6 +70,35 @@ def chip_table():
     print(f"\ntrend_ok: {entry.get('trend_ok')}")
 
 
+def serve_table():
+    recs = _load("BENCH_serve.json")
+    if not recs or not recs[0].get("history"):
+        return
+    entry = recs[0]["history"][-1]
+    smoke = " (smoke)" if entry.get("smoke") else ""
+    print(f"\n### Serving engine{smoke} — latest run "
+          f"({entry.get('ts_iso')}, {entry.get('backend')})\n")
+    print("| arch | req/s | tok/s | occupancy | TTFT p50/p95/p99 ms | "
+          "TPOT p50/p95/p99 ms | prefill compiles | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+
+    def _ms(row, fam):
+        vals = [row.get(f"{fam}_{p}_s") for p in ("p50", "p95", "p99")]
+        if any(v is None for v in vals):
+            return "-"
+        return "/".join(f"{v * 1e3:.2f}" for v in vals)
+
+    for r in entry.get("rows", []):
+        if not r.get("ok"):
+            print(f"| {r['arch']} | FAIL {r.get('error', '')[:60]} "
+                  "| | | | | | |")
+            continue
+        print(f"| {r['arch']} | {r['requests_per_s']} | {r['tokens_per_s']} "
+              f"| {r['mean_occupancy']:.2f} | {_ms(r, 'ttft')} | "
+              f"{_ms(r, 'tpot')} | {r.get('prefill_compiles', '-')} | "
+              f"{r.get('compile_s', '-')} |")
+
+
 def roofline_table():
     rows = [r for r in _load("roofline/*.json") if r.get("ok")]
     print("\n### Roofline baseline (per-chip, v5e constants; loop-corrected"
@@ -101,5 +130,6 @@ def perf_table():
 if __name__ == "__main__":
     dryrun_table()
     chip_table()
+    serve_table()
     roofline_table()
     perf_table()

@@ -212,3 +212,29 @@ def chip_report(deployed, cfg: Optional[ChipConfig] = None) -> Dict:
         "latency_ns": cost.latency_ns,
         "energy_nj": cost.energy_nj,
     }
+
+
+def publish_report(report: Dict, registry, *, prefix: str = "chip") -> None:
+    """Publish a ``chip_report()`` roll-up into an ``repro.obs``
+    MetricsRegistry (duck-typed: anything with ``gauge(name, help,
+    labels)``), so one ``obs`` snapshot describes serving latency AND the
+    chip placement it runs on. Chip totals become plain gauges; per-layer
+    placement stats become ``chip_layer_*`` gauges labeled by layer name."""
+    totals = {
+        "tiles_allocated": "tiles allocated across all layers",
+        "tiles_used": "tiles actually programmed (after compaction)",
+        "utilization": "placed params / programmed cells",
+        "area_mm2": "cost-model area",
+        "power_w": "cost-model power",
+        "latency_ns": "cost-model latency",
+        "energy_nj": "cost-model energy",
+    }
+    for key, help_ in totals.items():
+        registry.gauge(f"{prefix}_{key}", help_).set(float(report[key]))
+    for name, layer in report["layers"].items():
+        labels = {"layer": name}
+        for key in ("tiles_allocated", "tiles_used", "rows_placed",
+                    "rows_empty", "utilization", "params_placed"):
+            registry.gauge(f"{prefix}_layer_{key}",
+                           f"per-layer {key.replace('_', ' ')}",
+                           labels=labels).set(float(layer[key]))

@@ -12,6 +12,13 @@ the engine, and prints the EngineStats report.
 a solo run so the request genuinely stops early), then asserts slot reuse
 (>1 request served by some slot), at least one EOS eviction, and that every
 request completed. Exit status is non-zero on any violation.
+
+Observability: ``--trace-out FILE`` / ``--metrics-out FILE`` run the engine
+with a recording ``repro.obs.EngineRecorder`` and write a Chrome
+``trace_event`` JSON (open in Perfetto) and an ``obs/v1`` metrics snapshot
+(TTFT/TPOT/queue-wait/tick-phase histograms, per-prompt-length compile
+events, chip placement gauges for ``cim_tiled``). The default run keeps the
+no-op ``NullRecorder`` — zero recording overhead.
 """
 import argparse
 import contextlib
@@ -50,6 +57,12 @@ def main(argv=None):
     ap.add_argument("--check", action="store_true",
                     help="CI gate: assert slot reuse + EOS eviction + "
                          "full completion")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome trace_event JSON (Perfetto) of "
+                         "the run; enables recording")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the obs/v1 metrics snapshot JSON; enables "
+                         "recording")
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch, smoke=args.smoke)
@@ -72,10 +85,15 @@ def main(argv=None):
         from repro.launch.mesh import make_host_mesh
         mesh_ctx = make_host_mesh(model=args.mesh_model)
 
+    recorder = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import EngineRecorder
+        recorder = EngineRecorder()
+
     with mesh_ctx:
         queue = AdmissionQueue(args.queue_cap or None)
         eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
-                     queue=queue)
+                     queue=queue, recorder=recorder)
         eos_planted = args.check and args.new_tokens >= 3
         if eos_planted:
             # plant a genuine early stop: request 0's EOS is its own 2nd
@@ -83,9 +101,10 @@ def main(argv=None):
             # count => same fused-tick shapes): under a mesh the partitioned
             # reduction order depends on the batch shape, so a B=1 generate()
             # probe can argmax-diverge from the pooled decode on a random-
-            # init model whose logits are nearly flat.
+            # init model whose logits are nearly flat. The probe shares the
+            # recorder, so its compile events survive adopt_compiled.
             probe_eng = Engine(params, m, n_slots=args.slots,
-                               max_len=max_len)
+                               max_len=max_len, recorder=recorder)
             probe = probe_eng.run([Request(rid="probe",
                                            tokens=reqs[0].tokens,
                                            max_new=2)])
@@ -93,6 +112,30 @@ def main(argv=None):
             # the probe compiled the same prefill length + tick: reuse them
             eng.adopt_compiled(probe_eng)
         comps = eng.run(reqs)
+
+    if recorder is not None:
+        if eng.kan_deployed and m.kan_backend == "cim_tiled":
+            # chip placement gauges ride in the same registry as the serving
+            # latency metrics: one snapshot for the whole stack
+            from repro.core import kan as kanlib
+            from repro.hw import chip as chip_lib
+            deployed = [x for x in jax.tree_util.tree_leaves(
+                eng.params,
+                is_leaf=lambda x: isinstance(x, kanlib.DeployedKAN))
+                if isinstance(x, kanlib.DeployedKAN)]
+            for i, d in enumerate(deployed):
+                prefix = "chip" if len(deployed) == 1 else f"chip{i}"
+                try:
+                    chip_lib.publish_report(chip_lib.chip_report(d),
+                                            recorder.metrics, prefix=prefix)
+                except (TypeError, ValueError) as e:
+                    # stacked (vmapped) artifacts have no flat layer view
+                    print(f"note: chip telemetry skipped for artifact {i}: "
+                          f"{e}")
+        if args.trace_out:
+            print(f"trace  -> {recorder.export_trace(args.trace_out)}")
+        if args.metrics_out:
+            print(f"metrics -> {recorder.export_metrics(args.metrics_out)}")
 
     rep = eng.stats.report()
     kan_note = (f" kan_backend={m.kan_backend} (deployed once)"

@@ -1,0 +1,33 @@
+"""repro.obs — observability for the serving/kernel/chip stack.
+
+Zero-dependency telemetry in three parts, tied together by a recorder:
+
+* ``metrics``  — process-local Counter/Gauge/Histogram registry with
+                 log-spaced latency buckets, JSON ``snapshot()`` and
+                 Prometheus text ``exposition()``.
+* ``trace``    — span-based flight recorder (bounded ring buffer) that
+                 exports Chrome ``trace_event`` JSON for Perfetto.
+* ``profile``  — jit wrappers that record XLA compile events (count + wall
+                 time per distinct shape key) and ``cost_analysis``
+                 FLOPs/bytes, feeding ``benchmarks/roofline.py --from-obs``.
+
+``recorder.EngineRecorder`` is what you hand to ``serve.engine.Engine``;
+the default ``NullRecorder`` keeps the hot path untouched. ``hw.chip``
+publishes chip placement/utilization telemetry into the same registry, so
+one ``EngineRecorder.snapshot()`` describes the whole stack.
+
+Note: ``metrics`` and ``trace`` are stdlib-only; ``profile`` imports jax,
+so it is NOT re-exported here — import ``repro.obs.profile`` directly.
+"""
+from repro.obs.metrics import (Counter, DEFAULT_LATENCY_BUCKETS,  # noqa: F401
+                               Gauge, Histogram, MetricsRegistry,
+                               log_buckets)
+from repro.obs.recorder import (EngineRecorder, NullRecorder,  # noqa: F401
+                                SNAPSHOT_SCHEMA)
+from repro.obs.trace import TraceRecorder  # noqa: F401
+
+__all__ = [
+    "Counter", "DEFAULT_LATENCY_BUCKETS", "EngineRecorder", "Gauge",
+    "Histogram", "MetricsRegistry", "NullRecorder", "SNAPSHOT_SCHEMA",
+    "TraceRecorder", "log_buckets",
+]

@@ -1,0 +1,244 @@
+"""Engine-facing recording API: NullRecorder (default, no-op) and
+EngineRecorder (metrics + trace + compile profiling in one object).
+
+The serving engine does not talk to registries or ring buffers directly —
+it calls a small semantic vocabulary (``on_submit`` / ``on_admit`` /
+``on_first_token`` / ``on_decode_tick`` / ``on_evict`` / ``phase`` /
+``on_compile``) on whatever recorder it was built with:
+
+* :class:`NullRecorder` — the default. Every hook is a ``pass`` and
+  ``phase()`` hands back a shared do-nothing context manager, so the
+  disabled hot path costs an attribute lookup and nothing else (no
+  ``perf_counter`` calls, no event objects, no jaxpr change — the
+  batching-invariance and requant-free pins run against this path).
+* :class:`EngineRecorder` — owns a :class:`~repro.obs.metrics.MetricsRegistry`
+  and a :class:`~repro.obs.trace.TraceRecorder`, translates each hook into
+  counters/histograms *and* Chrome trace events, and accumulates
+  :class:`~repro.obs.profile.CompileEvent` records from profiled jits.
+
+``snapshot()`` is the one-stop description of the stack: metrics (TTFT /
+TPOT / queue-wait / tick-phase histograms, compile counters, any chip
+telemetry published into the same registry) + trace summary + the raw
+compile event list. Schema ``obs/v1`` — validated by
+``benchmarks/records_check.py``.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TID_REQUEST, TraceRecorder
+
+SNAPSHOT_SCHEMA = "obs/v1"
+
+#: queue-wait is measured in engine ticks, not seconds: powers of two up to
+#: 1024 ticks cover everything a sane trace produces
+QUEUE_WAIT_BUCKETS = tuple(float(2 ** i) for i in range(11))
+
+_NULL_CTX = contextlib.nullcontext()
+
+
+class NullRecorder:
+    """Do-nothing recorder: the engine's default. Keeps the tick path free
+    of timing calls; every hook is a no-op."""
+
+    enabled = False
+    metrics: Optional[MetricsRegistry] = None
+    trace: Optional[TraceRecorder] = None
+
+    def phase(self, name: str):
+        return _NULL_CTX
+
+    def on_submit(self, req, tick: int) -> None:
+        pass
+
+    def on_reject(self, req) -> None:
+        pass
+
+    def on_admit(self, req, slot: int, tick: int) -> None:
+        pass
+
+    def on_first_token(self, req, tick: int) -> Optional[float]:
+        return None
+
+    def on_decode_tick(self, n_active: int, dur_s: float) -> None:
+        pass
+
+    def on_evict(self, comp) -> None:
+        pass
+
+    def on_compile(self, event) -> None:
+        pass
+
+    def snapshot(self) -> dict:
+        return {}
+
+
+class EngineRecorder(NullRecorder):
+    """Metrics + trace + compile profiling for one engine (or several —
+    sharing one recorder across engines merges their telemetry)."""
+
+    enabled = True
+
+    def __init__(self, *, registry: Optional[MetricsRegistry] = None,
+                 trace: Optional[TraceRecorder] = None,
+                 trace_capacity: int = 65536):
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self.trace = (trace if trace is not None
+                      else TraceRecorder(capacity=trace_capacity))
+        self.compile_events: list = []
+        # rid -> (submit wall perf_counter, submit tick)
+        self._submitted: Dict[object, Tuple[float, int]] = {}
+        m = self.metrics
+        self._submitted_c = m.counter(
+            "serve_submitted_total", "requests accepted by the queue")
+        self._rejected_c = m.counter(
+            "serve_rejected_total", "submits refused (backpressure)")
+        self._prefill_c = m.counter(
+            "serve_prefill_total", "prefill-on-admit runs")
+        self._queue_wait_h = m.histogram(
+            "serve_queue_wait_ticks", "ticks between arrival and admission",
+            buckets=QUEUE_WAIT_BUCKETS)
+        self._ttft_h = m.histogram(
+            "serve_ttft_seconds", "submit -> first token (prefill) latency")
+        self._tpot_h = m.histogram(
+            "serve_tpot_seconds", "per-token decode latency (fused tick "
+            "wall time, one observation per token generated)")
+        self._active_g = m.gauge(
+            "serve_active_slots", "slots decoding in the latest tick")
+        self._tokens_c = m.counter(
+            "serve_decode_tokens_total", "tokens produced by decode ticks")
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def on_submit(self, req, tick: int) -> None:
+        self._submitted[req.rid] = (time.perf_counter(), tick)
+        self._submitted_c.inc()
+        self.trace.begin_async(
+            "request", req.rid,
+            args={"rid": str(req.rid), "priority": req.priority,
+                  "arrival": req.arrival, "max_new": req.max_new})
+
+    def on_reject(self, req) -> None:
+        self._rejected_c.inc()
+
+    def on_admit(self, req, slot: int, tick: int) -> None:
+        sub = self._submitted.get(req.rid)
+        wait = tick - max(req.arrival, sub[1]) if sub else 0
+        self._queue_wait_h.observe(wait)
+        self._prefill_c.inc()
+        self.trace.instant("admit", tid=TID_REQUEST,
+                           args={"rid": str(req.rid), "slot": slot,
+                                 "queue_wait_ticks": wait})
+
+    def on_first_token(self, req, tick: int) -> Optional[float]:
+        """Returns the TTFT (seconds since submit); None if never seen."""
+        sub = self._submitted.get(req.rid)
+        if sub is None:
+            return None
+        ttft = time.perf_counter() - sub[0]
+        self._ttft_h.observe(ttft)
+        self.trace.instant("first_token", tid=TID_REQUEST,
+                           args={"rid": str(req.rid),
+                                 "ttft_ms": round(ttft * 1e3, 3)})
+        return ttft
+
+    def on_decode_tick(self, n_active: int, dur_s: float) -> None:
+        self._active_g.set(n_active)
+        self._tokens_c.inc(n_active)
+        for _ in range(n_active):       # one TPOT observation per token
+            self._tpot_h.observe(dur_s)
+
+    def on_evict(self, comp) -> None:
+        self.metrics.counter("serve_completed_total",
+                             "completions by stop reason",
+                             labels={"reason": comp.reason}).inc()
+        self._submitted.pop(comp.rid, None)
+        self.trace.end_async(
+            "request", comp.rid,
+            args={"rid": str(comp.rid), "reason": comp.reason,
+                  "slot": comp.slot, "n_tokens": len(comp.tokens),
+                  "ticks": comp.finished_tick - comp.admitted_tick})
+
+    # -- tick phases ---------------------------------------------------------
+
+    def phase(self, name: str):
+        """Time one engine tick phase into both the per-phase latency
+        histogram and a nested trace span."""
+        hist = self.metrics.histogram("serve_tick_phase_seconds",
+                                      "engine tick phase wall time",
+                                      labels={"phase": name})
+        return _PhaseTimer(self, name, hist)
+
+    # -- compiles ------------------------------------------------------------
+
+    def on_compile(self, event) -> None:
+        self.compile_events.append(event)
+        labels = {"fn": event.name}
+        self.metrics.counter("compile_total",
+                             "XLA compiles per callable", labels=labels).inc()
+        self.metrics.histogram("compile_seconds",
+                               "lower+compile wall time",
+                               labels=labels).observe(event.wall_s)
+        if event.flops is not None:
+            self.metrics.gauge("compiled_flops",
+                               "cost_analysis FLOPs estimate (latest "
+                               "compile)", labels=labels).set(event.flops)
+        if event.bytes_accessed is not None:
+            self.metrics.gauge("compiled_bytes",
+                               "cost_analysis bytes-accessed estimate "
+                               "(latest compile)",
+                               labels=labels).set(event.bytes_accessed)
+        self.trace.instant("compile", args={
+            "fn": event.name, "key": event.key,
+            "wall_ms": round(event.wall_s * 1e3, 1)})
+
+    # -- export --------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return {"schema": SNAPSHOT_SCHEMA,
+                "metrics": self.metrics.snapshot()["metrics"],
+                "trace": self.trace.summary(),
+                "compiles": [e.as_dict() for e in self.compile_events]}
+
+    def export_metrics(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1)
+        return path
+
+    def export_trace(self, path: str) -> str:
+        return self.trace.export(path)
+
+
+class _PhaseTimer:
+    """Context manager: one phase -> histogram observation + trace span.
+    ``dur_s`` holds the measured duration after exit (the engine reuses the
+    decode-phase duration as the tick's per-token TPOT)."""
+
+    __slots__ = ("rec", "name", "hist", "dur_s", "_t0")
+
+    def __init__(self, rec: EngineRecorder, name: str, hist):
+        self.rec = rec
+        self.name = name
+        self.hist = hist
+        self.dur_s = 0.0
+        self._t0 = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dur_s = time.perf_counter() - self._t0
+        self.hist.observe(self.dur_s)
+        self.rec.trace.complete(self.name,
+                                self.rec.trace.now_us() - self.dur_s * 1e6,
+                                self.dur_s * 1e6, cat="tick")
+        return False

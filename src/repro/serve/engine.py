@@ -52,6 +52,7 @@ from repro.core import kan
 from repro.dist import sharding as shlib
 from repro.models import transformer as tfm
 from repro.models.transformer import ModelConfig
+from repro.obs.recorder import NullRecorder
 from repro.serve import decode as dec
 from repro.serve.scheduler import (AdmissionQueue, Completion, EngineStats,
                                    Request)
@@ -100,11 +101,21 @@ class Engine:
     queue       : optional AdmissionQueue (bounded => backpressure).
     eos_id      : engine-wide EOS (per-request ``Request.eos_id`` overrides).
     enc_len     : enc-dec only — encoder length shared by all requests.
+    recorder    : optional ``repro.obs.EngineRecorder``. Default is the
+                  no-op ``NullRecorder`` — the tick path then contains no
+                  timing calls and no profiled jits. With a recorder, the
+                  engine records per-request TTFT/TPOT + queue-wait, per-
+                  tick phase timings (admit/prefill/write/decode/host — the
+                  write phase absorbs the prefill device sync, so
+                  prefill+write together bound the real prefill latency),
+                  compile events per distinct prompt length, and the
+                  request lifecycle as Chrome trace spans.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
                  max_len: int, queue: Optional[AdmissionQueue] = None,
-                 eos_id: Optional[int] = None, enc_len: int = 0):
+                 eos_id: Optional[int] = None, enc_len: int = 0,
+                 recorder=None):
         # KAN-FFN archs serve frozen integer artifacts: deploy() runs
         # EXACTLY ONCE here, so the prefill/decode hot paths contain no
         # coefficient quantization or LUT construction (pinned by
@@ -137,18 +148,32 @@ class Engine:
 
         self.tick_no = 0
         self.stats = EngineStats(n_slots=n_slots)
+        self.obs = recorder if recorder is not None else NullRecorder()
         self._prefill_jit: Dict[Tuple[int, int], object] = {}
         self._decode_jit = jax.jit(
             functools.partial(_decode_fn, cfg=cfg), donate_argnums=1)
         self._write_jit = jax.jit(
             functools.partial(_write_fn, stages=tuple(self.stages)),
             donate_argnums=0)
+        if self.obs.enabled:
+            from repro.obs import profile as obs_profile
+            self._decode_jit = obs_profile.JitProfiler(
+                self._decode_jit, "decode_tick", self.obs)
+            self._write_jit = obs_profile.JitProfiler(
+                self._write_jit, "cache_write", self.obs)
 
     def _prefill_for(self, prompt_len: int, enc_len: int):
         key = (prompt_len, enc_len)
         if key not in self._prefill_jit:
-            self._prefill_jit[key] = jax.jit(functools.partial(
+            fn = jax.jit(functools.partial(
                 _prefill_fn, cfg=self.cfg, max_len=self.max_len))
+            if self.obs.enabled:
+                from repro.obs import profile as obs_profile
+                name = f"prefill_len{prompt_len}"
+                if enc_len:
+                    name += f"_enc{enc_len}"
+                fn = obs_profile.JitProfiler(fn, name, self.obs)
+            self._prefill_jit[key] = fn
         return self._prefill_jit[key]
 
     # -- admission / eviction ----------------------------------------------
@@ -177,14 +202,18 @@ class Engine:
                              f"enc_len={self.enc_len} but request has no "
                              "frames")
         ok = self.queue.submit(req)
-        if not ok:
+        if ok:
+            self.obs.on_submit(req, self.tick_no)
+        else:
             self.stats.rejected += 1
+            self.obs.on_reject(req)
         return ok
 
     def _eos_for(self, req: Request) -> Optional[int]:
         return req.eos_id if req.eos_id is not None else self.eos_id
 
     def _admit(self, slot: int, req: Request) -> List[Completion]:
+        self.obs.on_admit(req, slot, self.tick_no)
         toks = jnp.asarray(np.asarray(req.tokens))[None, :]
         batch = {"tokens": toks}
         enc_len = 0
@@ -192,11 +221,16 @@ class Engine:
             frames = jnp.asarray(np.asarray(req.frames))[None]
             batch["frames"] = frames
             enc_len = frames.shape[1]
-        tok0, solo = self._prefill_for(toks.shape[1], enc_len)(
-            self.params, batch)
-        self.cache = self._write_jit(self.cache, solo,
-                                     jnp.asarray(slot, jnp.int32))
-        tok0 = int(np.asarray(tok0)[0])
+        with self.obs.phase("prefill"):
+            tok0, solo = self._prefill_for(toks.shape[1], enc_len)(
+                self.params, batch)
+        with self.obs.phase("write"):
+            self.cache = self._write_jit(self.cache, solo,
+                                         jnp.asarray(slot, jnp.int32))
+            tok0 = int(np.asarray(tok0)[0])
+        ttft = self.obs.on_first_token(req, self.tick_no)
+        if ttft is not None:
+            self.stats.ttft_s.append(ttft)
         self.active[slot] = True
         self.index[slot] = toks.shape[1]
         self.last_tok[slot] = tok0
@@ -229,6 +263,7 @@ class Engine:
             self.stats.evicted_eos += 1
         else:
             self.stats.evicted_length += 1
+        self.obs.on_evict(comp)
         return comp
 
     # -- the tick -----------------------------------------------------------
@@ -237,12 +272,14 @@ class Engine:
         """One engine tick: admit whatever fits, then one fused decode over
         every slot. Returns the requests completed during this tick."""
         done: List[Completion] = []
-        while not self.active.all():
-            req = self.queue.pop(self.tick_no)
-            if req is None:
-                break
-            slot = int(np.flatnonzero(~self.active)[0])
-            done += self._admit(slot, req)
+        obs = self.obs
+        with obs.phase("admit"):
+            while not self.active.all():
+                req = self.queue.pop(self.tick_no)
+                if req is None:
+                    break
+                slot = int(np.flatnonzero(~self.active)[0])
+                done += self._admit(slot, req)
 
         if self.active.any():
             # inactive slots still flow through the fused step (static batch
@@ -252,24 +289,31 @@ class Engine:
                                  .astype(np.int32))
             index = jnp.asarray(np.where(self.active, self.index, 0)
                                 .astype(np.int32))
-            nxt, self.cache = self._decode_jit(self.params, self.cache,
-                                               tokens, index)
-            nxt = np.asarray(nxt)
+            with obs.phase("decode") as ph:
+                nxt, self.cache = self._decode_jit(self.params, self.cache,
+                                                   tokens, index)
+                nxt = np.asarray(nxt)       # blocks: real decode latency
             n_active = int(self.active.sum())
+            if obs.enabled:
+                # the fused tick produced one token per active slot: each of
+                # those tokens experienced the tick's wall time as its TPOT
+                obs.on_decode_tick(n_active, ph.dur_s)
+                self.stats.tpot_s.extend([ph.dur_s] * n_active)
             self.stats.occupancy_ticks += n_active
             self.stats.decode_tokens += n_active
-            for slot in np.flatnonzero(self.active):
-                slot = int(slot)
-                tok = int(nxt[slot])
-                self.slot_tokens[slot].append(tok)
-                self.index[slot] += 1
-                self.last_tok[slot] = tok
-                self.remaining[slot] -= 1
-                eos = self._eos_for(self.slot_req[slot])
-                if eos is not None and tok == eos:
-                    done.append(self._evict(slot, "eos"))
-                elif self.remaining[slot] <= 0:
-                    done.append(self._evict(slot, "length"))
+            with obs.phase("host"):
+                for slot in np.flatnonzero(self.active):
+                    slot = int(slot)
+                    tok = int(nxt[slot])
+                    self.slot_tokens[slot].append(tok)
+                    self.index[slot] += 1
+                    self.last_tok[slot] = tok
+                    self.remaining[slot] -= 1
+                    eos = self._eos_for(self.slot_req[slot])
+                    if eos is not None and tok == eos:
+                        done.append(self._evict(slot, "eos"))
+                    elif self.remaining[slot] <= 0:
+                        done.append(self._evict(slot, "length"))
         else:
             self.stats.idle_ticks += 1
         self.tick_no += 1
@@ -287,13 +331,34 @@ class Engine:
         self._prefill_jit = other._prefill_jit
         self._decode_jit = other._decode_jit
         self._write_jit = other._write_jit
+        if self.obs.enabled:
+            # re-bind adopted profilers to THIS engine's recorder (sharing
+            # their warm compiled caches); raw unprofiled jits are left
+            # untouched — re-wrapping them would force an AOT recompile
+            from repro.obs import profile as obs_profile
+
+            def rebind(fn, name):
+                if isinstance(fn, obs_profile.JitProfiler):
+                    return obs_profile.JitProfiler(fn, name, self.obs)
+                return fn
+
+            self._decode_jit = rebind(self._decode_jit, "decode_tick")
+            self._write_jit = rebind(self._write_jit, "cache_write")
+            self._prefill_jit = {
+                k: rebind(fn, f"prefill_len{k[0]}"
+                          + (f"_enc{k[1]}" if k[1] else ""))
+                for k, fn in other._prefill_jit.items()}
         return self
 
     def run(self, requests: Sequence[Request] = (),
             max_ticks: int = 1_000_000) -> List[Completion]:
         """Submit ``requests`` then tick until the queue drains and every
-        slot is free. Idle ticks advance time toward future arrivals. When
-        the admission queue is bounded, ``run`` itself absorbs the
+        slot is free. Idle stretches are *fast-forwarded*: when every slot
+        is free and the queue holds only future arrivals, ``tick_no`` jumps
+        straight to the next arrival instead of burning one host-loop
+        iteration per idle tick — the skipped ticks are counted in
+        ``idle_ticks`` (and ``ff_ticks``), so occupancy math is unchanged.
+        When the admission queue is bounded, ``run`` itself absorbs the
         backpressure: requests the queue refuses are held back and
         resubmitted as it drains, so nothing is silently dropped."""
         pending = list(requests)
@@ -303,6 +368,14 @@ class Engine:
             while pending and (self.queue.max_pending is None
                                or len(self.queue) < self.queue.max_pending):
                 self.submit(pending.pop(0))
+            if not self.active.any() and len(self.queue):
+                nxt = self.queue.next_arrival()
+                if nxt is not None and nxt > self.tick_no:
+                    skip = nxt - self.tick_no
+                    self.tick_no = nxt
+                    self.stats.ticks += skip
+                    self.stats.idle_ticks += skip
+                    self.stats.ff_ticks += skip
             if self.stats.ticks >= max_ticks:
                 raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
             out.extend(self.step())

@@ -11,13 +11,16 @@ bookkeeping of what happened afterwards:
                      class; ``submit`` returns False when the queue is full
                      (backpressure — callers must retry or shed load).
 * ``Completion``   — the finished request: generated tokens + why it stopped.
-* ``EngineStats``  — throughput/occupancy counters; ``report()`` is the
+* ``EngineStats``  — throughput/occupancy counters plus optional TTFT/TPOT
+                     latency samples (filled when the engine runs with an
+                     ``obs.EngineRecorder``); ``report()`` is the
                      machine-readable record benchmarks/bench_serve.py ships
                      to results/BENCH_serve.json.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import itertools
 from typing import Any, List, Optional, Tuple
 
@@ -53,34 +56,52 @@ class AdmissionQueue:
     """Bounded priority queue: higher ``Request.priority`` pops first, FIFO
     within a priority class, and only requests whose ``arrival`` tick has
     passed are eligible. ``submit`` returns False when ``max_pending`` is
-    reached — the engine surfaces that as backpressure, never silent drops."""
+    reached — the engine surfaces that as backpressure, never silent drops.
+
+    Arrival-partitioned heap implementation: not-yet-arrived requests wait
+    in a min-heap on ``(arrival, seq)``; once their tick passes they move to
+    the ready heap keyed ``(-priority, seq)``, so ``pop`` is O(log n) per
+    moved/popped item instead of the previous O(n) scan-and-remove. The
+    submission counter ``seq`` is global, so FIFO order within a priority
+    class is preserved across the future->ready migration (a request
+    submitted earlier but arriving later still pops first among equals once
+    both are eligible — identical to the old list implementation, pinned by
+    the property test in tests/test_obs.py)."""
 
     def __init__(self, max_pending: Optional[int] = None):
         self.max_pending = max_pending
-        self._items: List[Tuple[Tuple[int, int], Request]] = []
+        self._ready: List[Tuple[Tuple[int, int], Request]] = []
+        self._future: List[Tuple[int, int, Request]] = []
         self._seq = itertools.count()
 
     def __len__(self) -> int:
-        return len(self._items)
+        return len(self._ready) + len(self._future)
 
     def submit(self, req: Request) -> bool:
-        if self.max_pending is not None and len(self._items) >= self.max_pending:
+        if self.max_pending is not None and len(self) >= self.max_pending:
             return False
-        self._items.append(((-req.priority, next(self._seq)), req))
+        seq = next(self._seq)
+        heapq.heappush(self._future, (req.arrival, seq, req))
         return True
+
+    def _migrate(self, tick: int) -> None:
+        while self._future and self._future[0][0] <= tick:
+            arrival, seq, req = heapq.heappop(self._future)
+            heapq.heappush(self._ready, ((-req.priority, seq), req))
 
     def pop(self, tick: int) -> Optional[Request]:
         """Highest-priority (FIFO-within-class) request with arrival <= tick."""
-        ready = [it for it in self._items if it[1].arrival <= tick]
-        if not ready:
+        self._migrate(tick)
+        if not self._ready:
             return None
-        item = min(ready, key=lambda it: it[0])
-        self._items.remove(item)
-        return item[1]
+        return heapq.heappop(self._ready)[1]
 
     def next_arrival(self) -> Optional[int]:
         """Earliest arrival tick among pending requests (None when empty)."""
-        return min((it[1].arrival for it in self._items), default=None)
+        candidates = [req.arrival for _, req in self._ready]
+        if self._future:
+            candidates.append(self._future[0][0])
+        return min(candidates, default=None)
 
 
 @dataclasses.dataclass
@@ -88,10 +109,16 @@ class EngineStats:
     """Throughput/occupancy accounting. ``occupancy_ticks`` sums the number
     of active slots over decode ticks, so mean occupancy = occupancy_ticks /
     (decode_ticks * n_slots); ``slot_served[i]`` counts requests admitted to
-    slot i — any value > 1 proves slot reuse (eviction + readmission)."""
+    slot i — any value > 1 proves slot reuse (eviction + readmission).
+    ``ff_ticks`` counts idle ticks the engine *skipped* by fast-forwarding
+    to the next arrival (they are also included in ``idle_ticks`` and
+    ``ticks``, so occupancy math is unchanged). ``ttft_s`` / ``tpot_s`` are
+    per-request / per-token wall-latency samples, only collected when the
+    engine runs with a recording ``obs`` recorder."""
     n_slots: int
     ticks: int = 0                    # total ticks (decode + idle)
     idle_ticks: int = 0               # ticks with no active slot
+    ff_ticks: int = 0                 # idle ticks skipped via fast-forward
     prefills: int = 0
     decode_tokens: int = 0
     completed: int = 0
@@ -101,6 +128,8 @@ class EngineStats:
     occupancy_ticks: int = 0
     slot_served: List[int] = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tpot_s: List[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         if not self.slot_served:
@@ -114,12 +143,29 @@ class EngineStats:
         busy = max(self.decode_ticks, 1)
         return self.occupancy_ticks / (busy * self.n_slots)
 
+    @staticmethod
+    def _percentiles(samples: List[float]) -> dict:
+        if not samples:
+            return {"p50": None, "p95": None, "p99": None, "n": 0}
+        arr = np.asarray(samples, dtype=np.float64)
+        p50, p95, p99 = np.percentile(arr, [50, 95, 99])
+        return {"p50": round(float(p50), 6), "p95": round(float(p95), 6),
+                "p99": round(float(p99), 6), "n": len(samples)}
+
+    def latency_report(self) -> dict:
+        """p50/p95/p99 TTFT + TPOT (seconds) from the recorded samples;
+        percentile values are None when the engine ran unrecorded."""
+        return {"ttft": self._percentiles(self.ttft_s),
+                "tpot": self._percentiles(self.tpot_s)}
+
     def report(self) -> dict:
         wall = self.wall_s or float("nan")
+        lat = self.latency_report()
         return {
             "n_slots": self.n_slots,
             "ticks": self.ticks,
             "idle_ticks": self.idle_ticks,
+            "ff_ticks": self.ff_ticks,
             "prefills": self.prefills,
             "decode_tokens": self.decode_tokens,
             "completed": self.completed,
@@ -135,4 +181,6 @@ class EngineStats:
             "tokens_per_s": round(
                 (self.decode_tokens + self.prefills) / wall, 2)
             if self.wall_s else None,
+            "ttft_s": lat["ttft"],
+            "tpot_s": lat["tpot"],
         }
