@@ -4,7 +4,11 @@
     python -m benchmarks.bench_serve --arch mistral_nemo_12b --arch mamba2_1p3b
 
 Runs a staggered-arrival trace through repro.serve.engine for each arch and
-records requests/s, tokens/s, and mean slot occupancy. Unlike
+records requests/s, tokens/s, mean slot occupancy, and the paged-KV-pool
+columns (page_size / pages_in_use_peak / prefix_hit_rate — the default
+trace shares a common prompt prefix so attn rows prove prefix-page reuse
+end to end; ``--compare-monolithic`` appends a monolithic-layout twin of
+the first arch for a before/after pair). Unlike
 BENCH_kernels.json (overwritten single record), BENCH_serve.json keeps a
 monotonically APPENDED ``history`` — one entry per run — so the serving-perf
 trajectory stays reviewable across PRs. benchmarks/records_check.py (the CI
@@ -42,14 +46,16 @@ def _decode_tick_requant_free(eng, cfg) -> bool:
 
     tokens = jnp.zeros((eng.n_slots,), jnp.int32)
     index = jnp.ones((eng.n_slots,), jnp.int32)
+    pages = jnp.zeros((eng.n_slots, eng.n_slot_pages), jnp.int32)
     return not kan.trace_requantizes(
-        lambda p, c, t, i: engine_lib._decode_fn(p, c, t, i, cfg=cfg),
-        eng.params, eng.cache, tokens, index)
+        lambda p, c, t, i, g: engine_lib._decode_fn(p, c, t, i, g, cfg=cfg),
+        eng.params, eng.cache, tokens, index, pages)
 
 
 def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
                prompt_len: int, new_tokens: int, stagger: int,
-               seed: int) -> dict:
+               seed: int, page_size: int = 0, common_prefix: int = 0,
+               label: str = "") -> dict:
     import jax
     from repro.configs import get_arch
     from repro.models import transformer as tfm
@@ -62,7 +68,13 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
     reqs = synth_trace(
         m.vocab, requests, max_prompt=prompt_len,
         min_prompt=max(2, prompt_len // 2), max_new=new_tokens,
-        min_new=max(2, new_tokens // 2), stagger=stagger, seed=seed)
+        min_new=max(2, new_tokens // 2), stagger=stagger,
+        common_prefix=common_prefix, seed=seed)
+    max_len = common_prefix + prompt_len + new_tokens
+    # page_size=0 keeps the engine default (one page per slot — the
+    # degenerate monolithic layout); an explicit page size exercises the
+    # paged pool: chunked prefill + prefix-page sharing on attn archs.
+    page_kw = dict(page_size=page_size or None)
     # warm-up run compiles prefill-per-length + the fused tick; the timed
     # run replays the SAME trace on a fresh engine with the warm jit caches,
     # so it measures steady-state throughput, not compile time. Each engine
@@ -70,18 +82,18 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
     # per distinct prompt length — the row records how many XLA paid for),
     # the timed one captures steady-state TTFT/TPOT latency percentiles.
     rec_warm = EngineRecorder()
-    eng = Engine(params, m, n_slots=slots,
-                 max_len=prompt_len + new_tokens, recorder=rec_warm)
+    eng = Engine(params, m, n_slots=slots, max_len=max_len,
+                 recorder=rec_warm, **page_kw)
     eng.run(reqs)
     rec_timed = EngineRecorder()
-    eng2 = Engine(params, m, n_slots=slots,
-                  max_len=prompt_len + new_tokens,
-                  recorder=rec_timed).adopt_compiled(eng)
+    eng2 = Engine(params, m, n_slots=slots, max_len=max_len,
+                  recorder=rec_timed, **page_kw).adopt_compiled(eng)
     eng2.run(list(reqs))
     rep = eng2.stats.report()
     lat = rep["ttft_s"], rep["tpot_s"]
     row = {
-        "arch": arch_id, "family": m.family, "smoke": smoke, "ok": True,
+        "arch": label or arch_id, "family": m.family, "smoke": smoke,
+        "ok": True,
         "n_slots": slots, "requests": requests,
         "completed": rep["completed"],
         "requests_per_s": rep["requests_per_s"],
@@ -91,6 +103,13 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
         "ticks": rep["ticks"],
         "evicted_eos": rep["evicted_eos"],
         "evicted_length": rep["evicted_length"],
+        # paged KV pool footprint + prefix-cache effectiveness (all zero /
+        # one-page-per-slot under the default monolithic-equivalent layout)
+        "page_size": rep["page_size"],
+        "n_pages": rep["n_pages"],
+        "pages_in_use_peak": rep["pages_in_use_peak"],
+        "prefill_chunks": rep["prefill_chunks"],
+        "prefix_hit_rate": rep["prefix_hit_rate"],
         # steady-state latency percentiles (seconds, warm jit caches)
         "ttft_p50_s": lat[0]["p50"], "ttft_p95_s": lat[0]["p95"],
         "ttft_p99_s": lat[0]["p99"],
@@ -130,24 +149,44 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--stagger", type=int, default=2)
+    ap.add_argument("--page-size", type=int, default=4,
+                    help="KV page size for the paged pool (0 = engine "
+                         "default: one monolithic page per slot)")
+    ap.add_argument("--common-prefix", type=int, default=8,
+                    help="shared prompt-prefix tokens in the trace; with a "
+                         "page size that divides it, attn rows record a "
+                         "nonzero prefix_hit_rate (0 = disjoint prompts)")
+    ap.add_argument("--compare-monolithic", action="store_true",
+                    help="also bench the first arch with the default "
+                         "monolithic layout (page_size=0) on the same "
+                         "trace, appended as an '<arch>__monolithic' row — "
+                         "the before/after pair for the paged-pool change")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     archs = args.arch or DEFAULT_ARCHS
 
     import jax
 
+    # (arch, label, page_size) cells; the optional monolithic twin reruns
+    # the first arch on the identical trace with the one-page-per-slot
+    # layout so the pair isolates the paging overhead/benefit
+    cells = [(a, a, args.page_size) for a in archs]
+    if args.compare_monolithic:
+        cells.append((archs[0], f"{archs[0]}__monolithic", 0))
+
     rows, ok = [], True
-    for arch_id in archs:
+    for arch_id, label, page_size in cells:
         try:
             row = bench_arch(
                 arch_id, smoke=args.smoke, slots=args.slots,
                 requests=args.requests, prompt_len=args.prompt_len,
                 new_tokens=args.new_tokens, stagger=args.stagger,
-                seed=args.seed)
+                seed=args.seed, page_size=page_size,
+                common_prefix=args.common_prefix, label=label)
         except Exception as e:  # recorded, not silently missing
             ok = False
             traceback.print_exc(file=sys.stderr)
-            row = {"arch": arch_id, "smoke": args.smoke, "ok": False,
+            row = {"arch": label, "smoke": args.smoke, "ok": False,
                    "error": f"{type(e).__name__}: {e}"}
         rows.append(row)
         print(json.dumps(row), flush=True)

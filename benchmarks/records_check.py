@@ -14,8 +14,9 @@ Checks
   for the latest entry: one row per requested arch (no silently-missing
   cell), every row ``ok`` with the required metrics, row-level ``smoke``
   flags consistent with the entry-level flag, the KAN-FFN arch present,
-  and its row proving the deploy-once contract (``kan_deployed`` +
-  ``requant_free``).
+  its row proving the deploy-once contract (``kan_deployed`` +
+  ``requant_free``), and at least one row proving prefix-page reuse
+  (``prefix_hit_rate > 0`` — the bench trace shares a prompt prefix).
 * ``results/BENCH_chip.json`` — schema ``bench_chip/v1``, append-only
   history, and for the latest entry: one row per (As, mapping) cell of the
   requested sweep (no silently-missing cells), every row ``ok`` with sane
@@ -57,7 +58,11 @@ SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
                   # recorder would silently ship None columns
                   "ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
                   "tpot_p50_s", "tpot_p95_s", "tpot_p99_s",
-                  "prefill_compiles", "compiles_total", "compile_s"}
+                  "prefill_compiles", "compiles_total", "compile_s",
+                  # paged KV pool columns: fresh rows must record the page
+                  # geometry and prefix-cache effectiveness
+                  "page_size", "n_pages", "pages_in_use_peak",
+                  "prefill_chunks", "prefix_hit_rate"}
 SERVE_LATENCY_KEYS = ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
                       "tpot_p50_s", "tpot_p95_s", "tpot_p99_s")
 OBS_SCHEMA = "obs/v1"
@@ -156,6 +161,12 @@ def check_serve(path: str, problems: List[str]) -> None:
     if expected - got:
         problems.append(f"{path}: latest entry missing rows for "
                         f"{sorted(expected - got)} (silently-missing cells)")
+    if not any(isinstance(row.get("prefix_hit_rate"), (int, float))
+               and row.get("prefix_hit_rate", 0) > 0 for row in rows):
+        problems.append(
+            f"{path}: no row in the latest entry has prefix_hit_rate > 0 "
+            "(the default bench trace shares a prompt prefix, so at least "
+            "one attn arch must prove prefix-page reuse end to end)")
     if REQUIRED_SERVE_ARCHS - expected:
         problems.append(f"{path}: latest entry did not request "
                         f"{sorted(REQUIRED_SERVE_ARCHS - expected)} (the CI "

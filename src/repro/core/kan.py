@@ -116,6 +116,7 @@ class KANSpec:
 
     @property
     def n_layers(self) -> int:
+        """Number of KAN layers (``len(dims) - 1``)."""
         return len(self.dims) - 1
 
     @property
@@ -128,9 +129,11 @@ class KANSpec:
         return tuple(f"l{i}" for i in range(self.n_layers))
 
     def layer(self, i: int) -> KANLayerShape:
+        """Resolved (in, out, asp) shape of layer ``i``."""
         return KANLayerShape(self.dims[i], self.dims[i + 1], self.asp[i])
 
     def with_backend(self, backend: str, **kw) -> "KANSpec":
+        """Copy of the spec targeting another backend (plus overrides)."""
         return dataclasses.replace(self, backend=backend, **kw)
 
     @classmethod
@@ -147,6 +150,7 @@ class KANSpec:
 
 
 def param_count(spec: KANSpec) -> int:
+    """Trainable parameter count of the spec (coeffs + base weights)."""
     n = 0
     for i in range(spec.n_layers):
         ls = spec.layer(i)
@@ -188,6 +192,7 @@ def bound_input(x: Array, asp: ASPConfig) -> Array:
 
 
 def base_branch(x: Array, w_base: Array, activation: str) -> Array:
+    """The b(x) residual branch: ``act(x) @ w_base`` (original KAN form)."""
     act = {"relu": jax.nn.relu, "silu": jax.nn.silu}[activation]
     return act(x) @ w_base
 
@@ -240,12 +245,14 @@ class DeployedLayer:
     tiles: Optional[Any] = None     # hw.chip.TiledLayer (cim_tiled)
 
     def tree_flatten(self):
+        """Pytree protocol: all artifact arrays are children (traced)."""
         return ((self.codes, self.scale, self.hemi, self.w_base,
                  self.atten, self.row_order, self.slices, self.hemi_q,
                  self.tiles), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
+        """Pytree protocol inverse of ``tree_flatten``."""
         del aux
         return cls(*children)
 
@@ -260,10 +267,12 @@ class DeployedKAN:
     spec: KANSpec
 
     def tree_flatten(self):
+        """Pytree protocol: layers are children, the spec is static aux."""
         return (self.layers, self.spec)
 
     @classmethod
     def tree_unflatten(cls, spec, layers):
+        """Pytree protocol inverse of ``tree_flatten``."""
         return cls(tuple(layers), spec)
 
 
@@ -320,6 +329,7 @@ def register_backend(name: str):
 
 
 def get_backend(name: str) -> KANBackend:
+    """Registered backend instance by name (KeyError lists known names)."""
     try:
         return _BACKENDS[name]
     except KeyError:
@@ -328,6 +338,7 @@ def get_backend(name: str) -> KANBackend:
 
 
 def backends() -> Tuple[str, ...]:
+    """Sorted names of all registered backends."""
     return tuple(sorted(_BACKENDS))
 
 
@@ -341,10 +352,12 @@ class RefBackend(KANBackend):
     ground truth (differs from lut/fused by input-quantization error only)."""
 
     def run(self, layer, lspec, spec, x, rng=None):
+        """Dequantize the codes and evaluate the float Cox-de Boor basis."""
         coeffs = quant.dequantize_coeffs(layer.codes, layer.scale)
         return spline_ref(x, coeffs, lspec.asp)
 
     def train_run(self, coeffs, lspec, spec, x, qat):
+        """Pure float forward (the oracle ignores ``qat``)."""
         return spline_ref(x, coeffs, lspec.asp)
 
 
@@ -354,6 +367,7 @@ class LutBackend(KANBackend):
     dataflow on the MXU; the serving default). Bit-compatible with fused."""
 
     def run(self, layer, lspec, spec, x, rng=None):
+        """f32 expanded-basis matmul over the int8 codes + one scale."""
         basis = quant.quantized_basis(x, layer.hemi, lspec.asp)
         lead = basis.shape[:-2]
         ik = basis.shape[-2] * basis.shape[-1]
@@ -375,10 +389,12 @@ class LutInt8Backend(KANBackend):
 
     def deploy_extras(self, codes, scale, lspec, spec, stats, *,
                       layer_idx=0):
+        """Quantize the SH-LUT once at deploy time (the int8 WL-DAC view)."""
         hemi = quant.hemi_for(lspec.asp)
         return {"hemi_q": quant.quantize_hemi(hemi)}
 
     def run(self, layer, lspec, spec, x, rng=None):
+        """int8 x int8 -> int32 contraction; one f32 rescale at the end."""
         basis = quant.quantized_basis(x, layer.hemi_q, lspec.asp)  # int8
         lead = basis.shape[:-2]
         ik = basis.shape[-2] * basis.shape[-1]
@@ -398,11 +414,13 @@ class FusedBackend(KANBackend):
     VMEM; consumes the artifact's int8 codes + SH-LUT directly."""
 
     def run(self, layer, lspec, spec, x, rng=None):
+        """Deployed-artifact entry of the fused Pallas kernel."""
         from repro.kernels import ops  # lazy: keep core free of kernel deps
         return ops.kan_spline_fused_deployed(x, layer.codes, layer.scale,
                                              lspec.asp, hemi=layer.hemi)
 
     def train_run(self, coeffs, lspec, spec, x, qat):
+        """Fused kernel with the QAT custom-VJP wrapper."""
         from repro.kernels import ops
         # QAT custom-VJP kernel wrapper (forward quantized, STE backward)
         return ops.kan_spline_fused(x, coeffs, lspec.asp)
@@ -425,6 +443,7 @@ class CimBackend(KANBackend):
 
     def deploy_extras(self, codes, scale, lspec, spec, stats, *,
                       layer_idx=0):
+        """Bit-slice the codes and freeze the (KAN-SAM) row mapping."""
         from repro.core import kan_sam
         from repro.hw import cim as cim_lib
         ccfg = self._cim_cfg(spec)
@@ -445,6 +464,7 @@ class CimBackend(KANBackend):
         return out
 
     def run(self, layer, lspec, spec, x, rng=None):
+        """Analog crossbar forward over the programmed bit-slice image."""
         from repro.hw import cim as cim_lib
         ccfg = self._cim_cfg(spec)
         basis = quant.quantized_basis(x, layer.hemi, lspec.asp)
@@ -483,6 +503,7 @@ class CimTiledBackend(KANBackend):
 
     def deploy_extras(self, codes, scale, lspec, spec, stats, *,
                       layer_idx=0):
+        """Run the chip mapper: tiling, compaction, variation draws."""
         from repro.core import kan_sam
         from repro.hw import chip as chip_lib
         ccfg = self._chip_cfg(spec)
@@ -498,6 +519,7 @@ class CimTiledBackend(KANBackend):
         return {"tiles": tiled, "row_order": tiled.phys_of_logical}
 
     def run(self, layer, lspec, spec, x, rng=None):
+        """Multi-tile chip forward + int32 digital partial-sum reduction."""
         from repro.hw import chip as chip_lib
         ccfg = self._chip_cfg(spec)
         basis = quant.quantized_basis(x, layer.hemi, lspec.asp)

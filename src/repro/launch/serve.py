@@ -44,6 +44,16 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--stagger", type=int, default=2,
                     help="ticks between request arrivals")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV page size in tokens (0 = engine default: one "
+                         "page per slot, the degenerate monolithic layout)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page-pool capacity incl. the garbage page (0 = "
+                         "engine default: every slot's worst case fits)")
+    ap.add_argument("--common-prefix", type=int, default=0,
+                    help="shared prompt-prefix tokens in the synthetic "
+                         "trace (exercises prefix-page sharing on "
+                         "pure-attention archs)")
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="bounded admission queue (0 = unbounded)")
     ap.add_argument("--mesh-model", type=int, default=0,
@@ -77,8 +87,11 @@ def main(argv=None):
         m.vocab, args.requests,
         max_prompt=args.prompt_len, min_prompt=max(2, args.prompt_len // 2),
         max_new=args.new_tokens, min_new=max(2, args.new_tokens // 2),
-        stagger=args.stagger, seed=args.seed)
-    max_len = args.prompt_len + args.new_tokens
+        stagger=args.stagger, common_prefix=args.common_prefix,
+        seed=args.seed)
+    max_len = args.common_prefix + args.prompt_len + args.new_tokens
+    page_kw = dict(page_size=args.page_size or None,
+                   n_pages=args.n_pages or None)
 
     mesh_ctx = contextlib.nullcontext()
     if args.mesh_model:
@@ -93,7 +106,7 @@ def main(argv=None):
     with mesh_ctx:
         queue = AdmissionQueue(args.queue_cap or None)
         eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
-                     queue=queue, recorder=recorder)
+                     queue=queue, recorder=recorder, **page_kw)
         eos_planted = args.check and args.new_tokens >= 3
         if eos_planted:
             # plant a genuine early stop: request 0's EOS is its own 2nd
@@ -104,7 +117,7 @@ def main(argv=None):
             # init model whose logits are nearly flat. The probe shares the
             # recorder, so its compile events survive adopt_compiled.
             probe_eng = Engine(params, m, n_slots=args.slots,
-                               max_len=max_len, recorder=recorder)
+                               max_len=max_len, recorder=recorder, **page_kw)
             probe = probe_eng.run([Request(rid="probe",
                                            tokens=reqs[0].tokens,
                                            max_new=2)])

@@ -160,6 +160,65 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
     return out.reshape(b, 1, hq, hd).astype(q.dtype)
 
 
+def paged_gather(pool: Array, pages: Array) -> Array:
+    """Materialize per-slot K or V views from a page pool.
+
+    pool: [n_pages, ps, Kv, hd] (one layer's pages, shared by all slots);
+    pages: [B, P] page-table rows — entry j is the physical page holding
+    logical tokens [j*ps, (j+1)*ps). Returns [B, P*ps, Kv, hd] where the
+    gathered token axis IS logical position order, so the result drops into
+    ``decode_attention``/``chunked_attention`` exactly like a monolithic
+    cache row (garbage-page entries land past the valid length and are
+    masked by ``cache_index``/``kv_valid_len``)."""
+    b, p = pages.shape
+    _, ps, n_kv, hd = pool.shape
+    return pool[pages].reshape(b, p * ps, n_kv, hd)
+
+
+def paged_cache_update(k_pool: Array, v_pool: Array, k_new: Array,
+                       v_new: Array, pages: Array, index: Array
+                       ) -> Tuple[Array, Array]:
+    """Scatter one decode token's K/V through the page tables.
+
+    k_new/v_new: [B, 1, Kv, hd]; pages: [B, P]; index: [B] (0-based logical
+    position of the incoming token). Slot b writes page
+    ``pages[b, index[b] // ps]`` at offset ``index[b] % ps``. Live slots
+    always target distinct pages (the engine gives every slot private write
+    pages — copy-on-write forks any shared page first); inactive slots all
+    target the garbage page, where colliding writes are never read."""
+    ps = k_pool.shape[1]
+    index = jnp.asarray(index)
+    phys = jnp.take_along_axis(pages, (index // ps)[:, None], axis=1)[:, 0]
+    within = index % ps
+    k_pool = k_pool.at[phys, within].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, within].set(v_new[:, 0].astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_prefill_update(k_pool: Array, v_pool: Array, k_new: Array,
+                         v_new: Array, pages_row: Array, start: Array
+                         ) -> Tuple[Array, Array]:
+    """Scatter one prefill chunk's K/V into a single slot's pages.
+
+    k_new/v_new: [1, L, Kv, hd] with the chunk starting at logical position
+    ``start`` (a page-aligned traced scalar); pages_row: [P] — this slot's
+    page table. The chunk is zero-padded up to whole pages (the tail of a
+    partial final page is masked garbage) and written page-at-a-time into
+    ``pages_row[start//ps : start//ps + ceil(L/ps)]`` — all pages the slot
+    itself allocated, never a shared prefix page."""
+    ps = k_pool.shape[1]
+    _, l, n_kv, hd = k_new.shape
+    n_cp = -(-l // ps)
+    pad = n_cp * ps - l
+    if pad:
+        k_new = jnp.pad(k_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_new = jnp.pad(v_new, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kw = k_new[0].reshape(n_cp, ps, n_kv, hd).astype(k_pool.dtype)
+    vw = v_new[0].reshape(n_cp, ps, n_kv, hd).astype(v_pool.dtype)
+    pslice = jax.lax.dynamic_slice(pages_row, (start // ps,), (n_cp,))
+    return k_pool.at[pslice].set(kw), v_pool.at[pslice].set(vw)
+
+
 def cache_update(k_cache: Array, v_cache: Array, k_new: Array, v_new: Array,
                  index: Array, *, rolling: bool = False
                  ) -> Tuple[Array, Array]:

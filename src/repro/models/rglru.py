@@ -15,7 +15,7 @@ main: causal conv1d(4) → RG-LRU), merged by product, then output projection.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,8 +72,14 @@ def _gates(params, u: Array):
     return a, gated
 
 
-def rglru_scan(params, u: Array) -> Array:
-    """u: [B, T, dr] -> h: [B, T, dr] via associative scan over T."""
+def rglru_scan(params, u: Array, h0: Optional[Array] = None) -> Array:
+    """u: [B, T, dr] -> h: [B, T, dr] via associative scan over T.
+
+    ``h0`` optionally carries the hidden state from an earlier segment
+    (chunked prefill): the scan's cumulative decay ``A_t = prod a_1..a_t``
+    folds it in as ``h_t = A_t * h0 + h_t_local`` — mathematically exact,
+    though the associative scan's tree grouping over a shorter segment may
+    differ from a full-sequence scan at float epsilon."""
     a, b = _gates(params, u)
 
     def combine(x, y):
@@ -82,7 +88,8 @@ def rglru_scan(params, u: Array) -> Array:
         return a1 * a2, a2 * b1 + b2
 
     a_out, h = jax.lax.associative_scan(combine, (a, b), axis=1)
-    del a_out
+    if h0 is not None:
+        h = a_out * h0.astype(h.dtype)[:, None, :] + h
     return h
 
 

@@ -51,30 +51,40 @@ class NullRecorder:
     trace: Optional[TraceRecorder] = None
 
     def phase(self, name: str):
+        """Shared do-nothing context manager (no timer, no allocation)."""
         return _NULL_CTX
 
     def on_submit(self, req, tick: int) -> None:
-        pass
+        """Request accepted by the admission queue."""
 
     def on_reject(self, req) -> None:
-        pass
+        """Submit refused (queue backpressure)."""
 
     def on_admit(self, req, slot: int, tick: int) -> None:
-        pass
+        """Request dequeued into a decode slot."""
 
     def on_first_token(self, req, tick: int) -> Optional[float]:
+        """Prefill produced the first token; returns TTFT seconds (None
+        here — only the recording subclass measures)."""
         return None
 
     def on_decode_tick(self, n_active: int, dur_s: float) -> None:
-        pass
+        """One fused decode tick finished (n_active tokens produced)."""
 
     def on_evict(self, comp) -> None:
-        pass
+        """Request left its slot (eos or length)."""
+
+    def on_page_pool(self, in_use: int, n_pages: int) -> None:
+        """Per-tick page-pool occupancy."""
+
+    def on_prefix(self, matched: int, eligible: int) -> None:
+        """Prefix-cache outcome of one admission (pages hit vs probed)."""
 
     def on_compile(self, event) -> None:
-        pass
+        """A profiled jit paid an XLA compile."""
 
     def snapshot(self) -> dict:
+        """Telemetry summary; empty for the no-op recorder."""
         return {}
 
 
@@ -112,10 +122,19 @@ class EngineRecorder(NullRecorder):
             "serve_active_slots", "slots decoding in the latest tick")
         self._tokens_c = m.counter(
             "serve_decode_tokens_total", "tokens produced by decode ticks")
+        self._pages_g = m.gauge(
+            "serve_pages_in_use", "live KV pages after the latest tick")
+        self._prefix_hit_c = m.counter(
+            "serve_prefix_hit_total", "prompt pages served from the prefix "
+            "cache (physical page shared, prefill skipped)")
+        self._prefix_query_c = m.counter(
+            "serve_prefix_query_total", "prompt pages eligible for prefix "
+            "matching at admission")
 
     # -- request lifecycle ---------------------------------------------------
 
     def on_submit(self, req, tick: int) -> None:
+        """Start the request's async trace span and its TTFT clock."""
         self._submitted[req.rid] = (time.perf_counter(), tick)
         self._submitted_c.inc()
         self.trace.begin_async(
@@ -124,9 +143,11 @@ class EngineRecorder(NullRecorder):
                   "arrival": req.arrival, "max_new": req.max_new})
 
     def on_reject(self, req) -> None:
+        """Count a backpressure rejection."""
         self._rejected_c.inc()
 
     def on_admit(self, req, slot: int, tick: int) -> None:
+        """Observe queue wait (ticks) and mark the admit in the trace."""
         sub = self._submitted.get(req.rid)
         wait = tick - max(req.arrival, sub[1]) if sub else 0
         self._queue_wait_h.observe(wait)
@@ -148,12 +169,14 @@ class EngineRecorder(NullRecorder):
         return ttft
 
     def on_decode_tick(self, n_active: int, dur_s: float) -> None:
+        """Update slot gauge/token counter; one TPOT sample per token."""
         self._active_g.set(n_active)
         self._tokens_c.inc(n_active)
         for _ in range(n_active):       # one TPOT observation per token
             self._tpot_h.observe(dur_s)
 
     def on_evict(self, comp) -> None:
+        """Close the request's trace span and count the stop reason."""
         self.metrics.counter("serve_completed_total",
                              "completions by stop reason",
                              labels={"reason": comp.reason}).inc()
@@ -163,6 +186,22 @@ class EngineRecorder(NullRecorder):
             args={"rid": str(comp.rid), "reason": comp.reason,
                   "slot": comp.slot, "n_tokens": len(comp.tokens),
                   "ticks": comp.finished_tick - comp.admitted_tick})
+
+    # -- paging --------------------------------------------------------------
+
+    def on_page_pool(self, in_use: int, n_pages: int) -> None:
+        """Once per tick: page-pool occupancy gauge (capacity is static —
+        exported once in the gauge's labels would be redundant; the serve
+        bench row carries ``n_pages`` alongside the peak)."""
+        self._pages_g.set(in_use)
+
+    def on_prefix(self, matched: int, eligible: int) -> None:
+        """Once per admission on prefix-sharing archs: ``matched`` of
+        ``eligible`` prompt pages were served from the prefix cache."""
+        if matched:
+            self._prefix_hit_c.inc(matched)
+        if eligible:
+            self._prefix_query_c.inc(eligible)
 
     # -- tick phases ---------------------------------------------------------
 
@@ -177,6 +216,8 @@ class EngineRecorder(NullRecorder):
     # -- compiles ------------------------------------------------------------
 
     def on_compile(self, event) -> None:
+        """Record a CompileEvent: counter + wall-time histogram + FLOPs /
+        bytes cost gauges + an instant trace marker."""
         self.compile_events.append(event)
         labels = {"fn": event.name}
         self.metrics.counter("compile_total",
@@ -200,12 +241,14 @@ class EngineRecorder(NullRecorder):
     # -- export --------------------------------------------------------------
 
     def snapshot(self) -> dict:
+        """The obs/v1 document: metrics + trace summary + compile list."""
         return {"schema": SNAPSHOT_SCHEMA,
                 "metrics": self.metrics.snapshot()["metrics"],
                 "trace": self.trace.summary(),
                 "compiles": [e.as_dict() for e in self.compile_events]}
 
     def export_metrics(self, path: str) -> str:
+        """Write ``snapshot()`` as JSON; returns the path."""
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -214,6 +257,7 @@ class EngineRecorder(NullRecorder):
         return path
 
     def export_trace(self, path: str) -> str:
+        """Write the Chrome trace_event JSON (Perfetto); returns the path."""
         return self.trace.export(path)
 
 

@@ -11,10 +11,23 @@ Cache layouts per layer type (stacked [repeats, ...] inside scanned stages):
 ``decode_step`` is the artifact lowered for the ``decode_32k``/``long_500k``
 dry-run cells: one new token against a cache of the given sequence length.
 SSM/hybrid archs carry O(1) state — that is their long_500k story.
+
+Paged serving (the continuous-batching engine's layout): full-attention
+K/V lives in a shared page pool instead of per-slot rows —
+``init_paged_cache`` builds [n_pages, page_size, Kv, hd] pools for every
+``attn`` layer (one logical page-id space indexes all of them), while
+SWA/local rings, SSD/rgLRU state, conv buffers and cross-attn K/V stay
+per-slot. ``decode_step(..., pages=[B, P])`` routes reads/writes through
+the page tables, and ``prefill_chunk`` consumes a prompt page-aligned
+chunk at a time so prefill interleaves into decode ticks (docs/serving.md
+covers the exactness argument per layer family; ``chunk_tokens_for``
+returns the largest chunk unit that keeps the math identical to a solo
+run, or None for families that must prefill in one piece).
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -75,14 +88,47 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return out
 
 
-def cache_spec(cfg: ModelConfig) -> list:
-    """Logical sharding names for the cache pytree (kv_heads falls back to
-    head_dim sharding when the head count does not divide the model axis)."""
+def init_paged_cache(cfg: ModelConfig, n_slots: int, max_len: int, *,
+                     page_size: int, n_pages: int, enc_len: int = 0) -> list:
+    """Cache pytree for the paged serving engine.
+
+    Identical to ``init_cache`` except that every full-attention layer's
+    K/V becomes a shared page pool [n_pages, page_size, Kv, hd]: slots
+    address it through page tables (``pages`` in ``decode_step``) instead
+    of owning a row, so device memory scales with live tokens rather than
+    ``n_slots * max_len``. One logical page-id space indexes every layer's
+    pool. SWA/local rings, SSD/rgLRU state and cross-attn K/V keep their
+    per-slot [n_slots, ...] layout (their footprint is already O(1) or
+    window-bounded per slot)."""
+    hd = cfg.resolved_head_dim
+    pool_shape = (n_pages, page_size, cfg.padded_kv_heads, hd)
+    out = []
+    for stage in tfm.stages_for(cfg):
+        blk = {}
+        for i, sp in enumerate(stage.block):
+            c = _init_layer_cache(sp, cfg, n_slots, max_len, enc_len)
+            if sp.mixer == "attn":
+                c["k"] = jnp.zeros(pool_shape, cfg.dtype)
+                c["v"] = jnp.zeros(pool_shape, cfg.dtype)
+            blk[f"l{i}"] = c
+        if stage.repeats > 1:
+            blk = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (stage.repeats,) + x.shape), blk)
+        out.append(blk)
+    return out
+
+
+def _cache_spec(cfg: ModelConfig, paged: bool) -> list:
     kv_tail = "head_dim" if cfg.kv_shard_mode == "head_dim" else "none"
 
     def layer_spec(spec: LayerSpec):
         s = {}
-        if spec.mixer in ("attn", "swa", "local"):
+        if spec.mixer == "attn" and paged:
+            # page pool: page axis replicated, heads sharded as usual
+            s["k"] = ("none", "none", "kv_heads", kv_tail)
+            s["v"] = ("none", "none", "kv_heads", kv_tail)
+        elif spec.mixer in ("attn", "swa", "local"):
             s["k"] = ("batch", "seq", "kv_heads", kv_tail)
             s["v"] = ("batch", "seq", "kv_heads", kv_tail)
         elif spec.mixer == "ssd":
@@ -105,6 +151,61 @@ def cache_spec(cfg: ModelConfig) -> list:
     return out
 
 
+def cache_spec(cfg: ModelConfig) -> list:
+    """Logical sharding names for the ``init_cache`` pytree (kv_heads falls
+    back to head_dim sharding when the head count does not divide the model
+    axis)."""
+    return _cache_spec(cfg, paged=False)
+
+
+def paged_cache_spec(cfg: ModelConfig) -> list:
+    """Logical sharding names for the ``init_paged_cache`` pytree: page
+    pools replicate their page axis and shard kv_heads/head_dim exactly
+    like monolithic rows; per-slot leaves keep the ``cache_spec`` names."""
+    return _cache_spec(cfg, paged=True)
+
+
+def chunk_tokens_for(cfg: ModelConfig, page_size: int) -> Optional[int]:
+    """Chunked-prefill unit (tokens per engine tick) for this arch, or None
+    when the arch must prefill each prompt in a single piece.
+
+    Chunking is enabled only where the chunked math is *exact* against a
+    solo full-prompt run: pure-attention stacks (masked page slots
+    contribute exact zeros to the online softmax) and attention+SSD stacks
+    (``ssd_chunked`` carries ``init_state`` across chunks, provided chunk
+    boundaries are multiples of the SSD scan chunk — hence the lcm).
+    rgLRU (associative-scan tree grouping changes with segment length),
+    SWA/local windows, MoE FFNs (capacity routing couples tokens across
+    the chunk), enc-dec and modality-frontend archs prefill whole —
+    still through the paged pool, still interleaved into the tick loop,
+    just not split."""
+    if cfg.family == "encdec" or cfg.frontend != "none":
+        return None
+    specs = [sp for st in tfm.stages_for(cfg) for sp in st.block]
+    mixers = {sp.mixer for sp in specs}
+    if any(sp.ffn == "moe" for sp in specs) or not mixers <= {"attn", "ssd"}:
+        return None
+    step = page_size
+    if "ssd" in mixers:
+        c = cfg.ssd_cfg.chunk
+        step = step * c // math.gcd(step, c)
+    return step
+
+
+def prefix_sharing_ok(cfg: ModelConfig) -> bool:
+    """Whether hash-matched prompt prefixes may share physical pages.
+
+    True only for pure-attention decoder-only stacks: all of a request's
+    sequence state then lives in the (position-aligned, content-identical)
+    pages themselves. Any recurrent mixer carries per-slot state that the
+    pool does not capture, and enc-dec K/V depends on the encoder input,
+    so those families always recompute."""
+    if chunk_tokens_for(cfg, 1) is None:
+        return False
+    return {sp.mixer for st in tfm.stages_for(cfg)
+            for sp in st.block} == {"attn"}
+
+
 # ---------------------------------------------------------------------------
 # decode
 # ---------------------------------------------------------------------------
@@ -120,12 +221,47 @@ def _qkv(p, xn, cfg: ModelConfig, which: str = "attn"):
     return q, k, v
 
 
+def _mask_state_writes(new, cache, pages: Optional[Array]):
+    """Keep recurrent per-slot state (ssd/rglru rows) frozen for slots that
+    are not actively decoding. Full-attention garbage writes are harmless —
+    inactive slots' page tables point at the garbage page — but recurrent
+    rows have no such indirection, and a slot mid chunked-prefill holds
+    REAL carried state in its row that a fused tick between chunks would
+    clobber. The page table doubles as the activity mask: the engine zeroes
+    inactive slots' rows to GARBAGE_PAGE, so row 0 is a real page iff the
+    slot is decoding."""
+    if pages is None:                      # solo / static batching: no-op
+        return new
+    act = pages[:, 0] != 0                 # GARBAGE_PAGE
+    return {k: jnp.where(act.reshape((-1,) + (1,) * (v.ndim - 1)),
+                         v, cache[k].astype(v.dtype))
+            for k, v in new.items()}
+
+
 def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
-                  index: Array):
+                  index: Array, pages: Optional[Array] = None):
     """x: [B, 1, D]; index: count of tokens so far (0-based position of the
-    token being decoded) — scalar, or [B] for per-slot continuous batching."""
+    token being decoded) — scalar, or [B] for per-slot continuous batching.
+    ``pages`` ([B, P] page tables) switches full-attention layers onto the
+    paged pool layout; all other layer kinds ignore it."""
     new_cache = dict(cache)
-    if spec.mixer in ("attn", "swa", "local"):
+    if spec.mixer == "attn" and pages is not None:
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        q, k, v = _qkv(p, xn, cfg)
+        if cfg.rope_theta:
+            pos = index[:, None] if index.ndim else jnp.full((1, 1), index)
+            q = layers.apply_rope(q, pos, cfg.rope_theta)
+            k = layers.apply_rope(k, pos, cfg.rope_theta)
+        bidx = jnp.broadcast_to(jnp.asarray(index), (x.shape[0],))
+        kp, vp = attn_lib.paged_cache_update(cache["k"], cache["v"], k, v,
+                                             pages, bidx)
+        new_cache["k"], new_cache["v"] = kp, vp
+        ck = attn_lib.paged_gather(kp, pages)
+        cv = attn_lib.paged_gather(vp, pages)
+        o = attn_lib.decode_attention(q, ck, cv, bidx + 1)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["attn"]["wo"].astype(cfg.dtype))
+    elif spec.mixer in ("attn", "swa", "local"):
         xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
         q, k, v = _qkv(p, xn, cfg)
         if cfg.rope_theta:
@@ -144,14 +280,14 @@ def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
         y, sc = ssd_lib.apply_ssd_block_decode(
             p["ssd"], xn, {"state": cache["state"],
                            "conv_buf": cache["conv_buf"]}, cfg.ssd_cfg)
-        new_cache.update(sc)
+        new_cache.update(_mask_state_writes(sc, cache, pages))
         x = x + y.astype(x.dtype)
     elif spec.mixer == "rglru":
         xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
         y, rc = rglru_lib.apply_rglru_block_decode(
             p["rglru"], xn, {"h": cache["h"],
                              "conv_buf": cache["conv_buf"]}, cfg.rglru_cfg)
-        new_cache.update(rc)
+        new_cache.update(_mask_state_writes(rc, cache, pages))
         x = x + y.astype(x.dtype)
     if spec.cross_attn:
         xn = layers.NORM_APPLY[cfg.norm](p["cross_norm"], x)
@@ -176,13 +312,20 @@ def _decode_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
 
 
 def decode_step(params, cache, tokens: Array, index: Array,
-                cfg: ModelConfig) -> Tuple[Array, list]:
+                cfg: ModelConfig, *,
+                pages: Optional[Array] = None) -> Tuple[Array, list]:
     """One decode step. tokens: [B, 1] -> (logits [B, 1, V], new cache).
 
     ``index`` is the 0-based position of the incoming token: a scalar when
     the whole batch decodes in lockstep (classic static batching), or a [B]
     vector when every row sits at its own offset (the continuous-batching
-    engine's fused multi-slot tick — see repro.serve.engine)."""
+    engine's fused multi-slot tick — see repro.serve.engine).
+
+    ``pages`` ([B, P] int32 page tables, paged engine only) makes every
+    full-attention layer read/write the shared page pool instead of
+    per-slot rows; the cache pytree must then come from
+    ``init_paged_cache``. Inactive slots point every table entry at the
+    garbage page so their fused-tick writes are harmless."""
     index = jnp.asarray(index)
     x = layers.embed_lookup(params["embed"], tokens).astype(cfg.dtype)
     if cfg.family == "encdec":
@@ -199,7 +342,8 @@ def decode_step(params, cache, tokens: Array, index: Array,
             nc = {}
             for i, sp in enumerate(stage.block):
                 x, nc[f"l{i}"] = _decode_layer(
-                    st_params[f"l{i}"], st_cache[f"l{i}"], x, sp, cfg, index)
+                    st_params[f"l{i}"], st_cache[f"l{i}"], x, sp, cfg, index,
+                    pages)
             new_caches.append(nc)
         else:
             def body(carry, inp, stage=stage):
@@ -208,7 +352,7 @@ def decode_step(params, cache, tokens: Array, index: Array,
                 nc = {}
                 for i, sp in enumerate(stage.block):
                     xx, nc[f"l{i}"] = _decode_layer(
-                        lp[f"l{i}"], lc[f"l{i}"], xx, sp, cfg, index)
+                        lp[f"l{i}"], lc[f"l{i}"], xx, sp, cfg, index, pages)
                 return xx, nc
             x, nc = jax.lax.scan(body, x, (st_params, st_cache))
             new_caches.append(nc)
@@ -325,6 +469,155 @@ def _rglru_prefill(p, x, cfg: ModelConfig):
     h = rglru_lib.rglru_scan(p, main)
     y = (h.astype(x.dtype) * gate) @ p["w_out"]
     return y, {"h": h[:, -1], "conv_buf": conv_buf}
+
+
+def _ssd_prefill_chunk(p, x, cfg: ModelConfig, row: Dict[str, Array],
+                       first: bool):
+    """One chunk of SSD prefill for a single slot (batch 1).
+
+    ``row`` holds the slot's carried state: ``state`` [1,H,P,N] (recurrent
+    state at the chunk boundary) and ``conv_buf`` [1,cw-1,dc] (the last
+    conv_width-1 pre-conv activations of the previous chunk). ``first``
+    (static) selects implicit-zero history — that path is op-for-op the
+    solo ``_ssd_prefill`` math, and the carried path is exact because chunk
+    boundaries are multiples of the SSD scan chunk (``chunk_tokens_for``)
+    so ``ssd_chunked`` executes the identical inter-chunk recurrence."""
+    scfg = cfg.ssd_cfg
+    b, t, _ = x.shape
+    di, n, h = scfg.d_inner, scfg.d_state, scfg.n_heads
+    cw = scfg.conv_width
+    zxbcdt = x @ p["in_proj"]
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    if first:
+        conv_out = jax.nn.silu(ssd_lib._causal_conv(conv_in, p["conv"]))
+        full = jnp.concatenate(
+            [jnp.zeros((b, cw - 1, conv_in.shape[-1]), conv_in.dtype),
+             conv_in], axis=1)
+        init_state = None
+    else:
+        full = jnp.concatenate(
+            [row["conv_buf"].astype(conv_in.dtype), conv_in], axis=1)
+        conv_out = jax.nn.silu(
+            ssd_lib._causal_conv(full, p["conv"])[:, cw - 1:])
+        init_state = row["state"].astype(jnp.float32)
+    new_buf = full[:, full.shape[1] - (cw - 1):].astype(cfg.dtype)
+    xin, bmat, cmat = jnp.split(conv_out, [di, di + n], axis=-1)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_lib.ssd_chunked(
+        xin.reshape(b, t, h, scfg.head_dim), dtp, a, bmat, cmat,
+        p["d_skip"], chunk=scfg.chunk, init_state=init_state)
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"state": state.astype(row["state"].dtype),
+                               "conv_buf": new_buf}
+
+
+def _chunk_layer(p, cache, x, spec: LayerSpec, cfg: ModelConfig,
+                 positions, start, slot, pages_row, first: bool):
+    """One layer of chunked prefill for one slot. x: [1, L, D].
+
+    Full-attention K/V goes through the page pool (``paged_prefill_update``
+    writes the chunk, ``paged_gather`` reads every earlier page back for
+    the non-first chunks). SSD layers carve the slot's row out of the
+    per-slot state arrays, run ``_ssd_prefill_chunk`` and write it back —
+    ``slot`` stays a traced scalar so one compiled chunk serves all slots.
+    Only families ``chunk_tokens_for`` admits ever reach here."""
+    new_cache = dict(cache)
+    if spec.mixer == "attn":
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        q, k, v = _qkv(p, xn, cfg)
+        if cfg.rope_theta:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+        kp, vp = attn_lib.paged_prefill_update(cache["k"], cache["v"], k, v,
+                                               pages_row, start)
+        new_cache["k"], new_cache["v"] = kp, vp
+        if first:
+            # start == 0: the chunk is self-contained — same math as solo.
+            o = attn_lib.chunked_attention(q, k, v, causal=True,
+                                           kv_chunk=cfg.attn_kv_chunk)
+        else:
+            ck = attn_lib.paged_gather(kp, pages_row[None])
+            cv = attn_lib.paged_gather(vp, pages_row[None])
+            o = attn_lib.chunked_attention(
+                q, ck, cv, causal=True, q_offset=start,
+                kv_valid_len=start + x.shape[1], kv_chunk=cfg.attn_kv_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o,
+                           p["attn"]["wo"].astype(cfg.dtype))
+    elif spec.mixer == "ssd":
+        xn = layers.NORM_APPLY[cfg.norm](p["mixer_norm"], x)
+        row = {k: jax.lax.dynamic_slice_in_dim(cache[k], slot, 1, axis=0)
+               for k in ("state", "conv_buf")}
+        y, rc = _ssd_prefill_chunk(p["ssd"], xn, cfg, row, first)
+        for k in ("state", "conv_buf"):
+            new_cache[k] = jax.lax.dynamic_update_slice_in_dim(
+                cache[k], rc[k].astype(cache[k].dtype), slot, axis=0)
+        x = x + y.astype(x.dtype)
+    else:
+        raise NotImplementedError(
+            f"chunked prefill does not support mixer={spec.mixer!r} "
+            f"(chunk_tokens_for should have returned None)")
+    if spec.ffn == "mlp":
+        x = x + tfm._mlp_ffn(p, x, cfg)
+    elif spec.ffn == "kan":
+        xn = layers.NORM_APPLY[cfg.norm](p["ffn_norm"], x)
+        x = x + kan.apply_any(p["kan"], xn, cfg.kan_spec).astype(x.dtype)
+    elif spec.ffn != "none":
+        raise NotImplementedError(
+            f"chunked prefill does not support ffn={spec.ffn!r}")
+    return x, new_cache
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens: Array,
+                  start: Array, slot: Array, pages_row: Array, *,
+                  first: bool, last: bool) -> Tuple[Array, list]:
+    """Consume one page-aligned prompt chunk for one slot of the paged
+    engine. tokens: [1, L] at logical positions [start, start+L); cache is
+    the engine's full ``init_paged_cache`` pytree (pools are shared, SSD
+    rows are per-slot — ``slot``/``start`` are traced, so the compiled
+    artifact is keyed only on (L, first, last)).
+
+    Returns (token [1] int32, new cache): the greedy next token after the
+    prompt when ``last``, else a zero placeholder (non-final chunks never
+    unembed — the [L, V] logits tensor is skipped entirely)."""
+    start = jnp.asarray(start)
+    slot = jnp.asarray(slot)
+    x = layers.embed_lookup(params["embed"], tokens).astype(cfg.dtype)
+    positions = start + jnp.arange(tokens.shape[1])
+    stages = tfm.stages_for(cfg)
+    new_caches = []
+    for st_params, st_cache, stage in zip(params["stages"], cache, stages):
+        if stage.repeats == 1:
+            nc = {}
+            for i, sp in enumerate(stage.block):
+                x, nc[f"l{i}"] = _chunk_layer(
+                    st_params[f"l{i}"], st_cache[f"l{i}"], x, sp, cfg,
+                    positions, start, slot, pages_row, first)
+            new_caches.append(nc)
+        else:
+            def body(carry, inp, stage=stage):
+                xx = carry
+                lp, lc = inp
+                nc = {}
+                for i, sp in enumerate(stage.block):
+                    xx, nc[f"l{i}"] = _chunk_layer(
+                        lp[f"l{i}"], lc[f"l{i}"], xx, sp, cfg, positions,
+                        start, slot, pages_row, first)
+                return xx, nc
+            x, nc = jax.lax.scan(body, x, (st_params, st_cache))
+            new_caches.append(nc)
+    if not last:
+        return jnp.zeros((1,), jnp.int32), new_caches
+    x = x[:, -1:]
+    x = layers.NORM_APPLY[cfg.norm](params["final_norm"], x)
+    table = params.get("unembed", params["embed"])
+    logits = layers.unembed(x, table.astype(cfg.dtype))
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), new_caches
 
 
 def prefill(params, cfg: ModelConfig, batch: Dict[str, Array],

@@ -4,24 +4,41 @@ waiting for the slowest sequence in a static batch.
 
 Design
 ------
-* **Slot pool** — one shared cache pytree ``init_cache(cfg, n_slots,
-  max_len)``. Under an active mesh the pool is laid out with
-  ``dist.sharding.tree_shardings`` over ``cache_spec(cfg)`` (batch on the
-  data axes, kv_heads/head_dim on 'model'), so the engine inherits the same
-  sharding rules as training/dry-run.
-* **Prefill-on-admit** — a newly admitted request prefills *alone* (B=1 at
-  its exact prompt length; one compile per distinct length) against the
-  pool's ``max_len`` so its cache leaves are shape-compatible with the pool,
-  then its rows are written into the free slot with
-  ``jax.lax.dynamic_update_slice_in_dim`` under a donated jit — XLA updates
-  the pool in place, no reallocation.
-* **Fused multi-slot decode** — every tick runs ONE ``decode_step`` over all
-  N slots with a per-slot index vector (see repro.serve.decode); slots at
-  different sequence offsets decode in the same kernel launch. Inactive
-  slots compute garbage that is never read: their host-side state is frozen
-  and their cache rows are fully rewritten at the next admission.
+* **Paged KV pool** — full-attention K/V lives in a shared page pool
+  (``dec.init_paged_cache``): ``n_pages`` pages of ``page_size`` tokens,
+  addressed through per-slot page tables. Device memory scales with live
+  tokens instead of ``n_slots * max_len``; host bookkeeping (free list,
+  refcounts, prefix hashes) lives in ``serve.paging.PagedAllocator``.
+  Admission *reserves* a request's worst-case page demand up front
+  (``ceil((prompt + max_new - 1) / page_size)``), then allocates decode
+  pages lazily as the sequence crosses page boundaries — so admitted
+  requests can never deadlock on pages, and unused tail reservations are
+  returned at eviction. Page 0 is the garbage page: inactive slots' tables
+  point at it so the fused tick's dummy writes never touch live data.
+* **Prefix reuse** — for pure-attention stacks (``dec.prefix_sharing_ok``)
+  a finished prompt registers each full page's cumulative content hash;
+  later requests whose prompt matches page-for-page *share the physical
+  pages* (refcount > 1) and skip recomputing them. Shared pages are never
+  written — the engine only writes pages it allocated itself, and a
+  defensive copy-on-write ``fork`` guards the (unreachable by
+  construction) case of a write landing on a shared page.
+* **Chunked prefill** — prompts of chunk-exact families
+  (``dec.chunk_tokens_for``: pure-attn, attn+SSD) are consumed one
+  page-aligned chunk per engine tick, interleaved with fused decode, so a
+  long prompt never head-of-line-blocks tokens for running requests.
+  Families where chunked math would diverge from a solo run (rgLRU,
+  SWA/local windows, MoE capacity routing, enc-dec, modality frontends)
+  prefill whole — still into the paged pool, in a single tick.
+* **Fused multi-slot decode** — every tick runs ONE ``decode_step`` over
+  all N slots with per-slot index and page-table vectors (see
+  repro.serve.decode); slots at different sequence offsets decode in the
+  same kernel launch. Inactive and still-prefilling slots flow through
+  with index 0 and all-garbage page tables: they compute garbage that is
+  never read and write only the garbage page.
 * **Eviction** — a slot frees on EOS or when the request's ``max_new``
-  budget is spent; the next queued request is admitted on the same tick.
+  budget is spent: its pages are released (shared pages just drop one
+  reference), outstanding reservations are returned, and the next queued
+  request is admitted on the same tick.
 * **KAN deploy-once** — KAN-FFN architectures are served against frozen
   ``core.kan.DeployedKAN`` artifacts built at engine construction
   (``tfm.deploy_kan``): int8 coefficient codes, per-output-channel scales
@@ -32,9 +49,11 @@ Exactness
 Per-request outputs are independent of co-resident slots for every
 batch-independent layer family (attn/swa/local, ssd, rglru, cross-attn,
 mlp/kan FFN) — tests/test_engine.py pins this batching invariance against
-solo runs. The one exception is MoE capacity routing: GShard token dropping
-couples tokens across the batch, so MoE archs match solo runs only when
-capacity is not binding (raise ``capacity_factor`` for serving).
+solo runs, through the paged pool and chunked prefill. The one exception
+is MoE capacity routing: GShard token dropping couples tokens across the
+batch, so MoE archs match solo runs only when capacity is not binding
+(raise ``capacity_factor`` for serving). docs/serving.md walks the
+exactness argument per family.
 
 Decoding is greedy (argmax), matching ``serve.decode.generate``.
 """
@@ -54,6 +73,7 @@ from repro.models import transformer as tfm
 from repro.models.transformer import ModelConfig
 from repro.obs.recorder import NullRecorder
 from repro.serve import decode as dec
+from repro.serve.paging import GARBAGE_PAGE, PagedAllocator, page_hashes
 from repro.serve.scheduler import (AdmissionQueue, Completion, EngineStats,
                                    Request)
 
@@ -63,23 +83,13 @@ from repro.serve.scheduler import (AdmissionQueue, Completion, EngineStats,
 # bound-method closure would keep the defining engine — and its whole slot
 # pool — alive inside any callable shared through ``adopt_compiled``.
 
-def _decode_fn(params, cache, tokens, index, *, cfg):
-    """Fused tick: [N] last tokens + [N] per-slot indices -> next tokens."""
+def _decode_fn(params, cache, tokens, index, pages, *, cfg):
+    """Fused tick: [N] last tokens + [N] indices + [N, P] page tables ->
+    next tokens. Full-attention layers read/write through ``pages``; all
+    other layer families keep their per-slot rows."""
     logits, cache = dec.decode_step(params, cache, tokens[:, None], index,
-                                    cfg)
+                                    cfg, pages=pages)
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
-
-
-def _write_fn(pool, solo, slot, *, stages):
-    """Write a B=1 prefill cache into pool row ``slot`` (pool donated)."""
-    out = []
-    for pool_blk, solo_blk, stage in zip(pool, solo, stages):
-        ax = 1 if stage.repeats > 1 else 0
-        out.append(jax.tree.map(
-            lambda p, s, ax=ax: jax.lax.dynamic_update_slice_in_dim(
-                p, s.astype(p.dtype), slot, axis=ax),
-            pool_blk, solo_blk))
-    return out
 
 
 def _prefill_fn(params, batch, *, cfg, max_len):
@@ -88,32 +98,130 @@ def _prefill_fn(params, batch, *, cfg, max_len):
     return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), cache
 
 
+def _chunk_fn(params, cache, tokens, start, slot, pages_row, *, cfg,
+              first, last):
+    """One chunked-prefill step (see ``dec.prefill_chunk``); compiled once
+    per (chunk length, first, last) and shared by every slot/offset."""
+    return dec.prefill_chunk(params, cfg, cache, tokens, start, slot,
+                             pages_row, first=first, last=last)
+
+
+def _scatter_attn_leaf(pool_leaf, solo_leaf, pages_row, page_size):
+    """Write a solo-prefill monolithic K or V row [1, max_len, Kv, hd] into
+    the page pool through one slot's page table. The row is padded to whole
+    pages; table entries still pointing at the garbage page (positions the
+    prompt never reached) harmlessly overwrite garbage-page contents."""
+    n_cp = pages_row.shape[0]
+    t = solo_leaf.shape[1]
+    row = jnp.pad(solo_leaf[0], ((0, n_cp * page_size - t), (0, 0), (0, 0)))
+    row = row.reshape(n_cp, page_size, *row.shape[1:])
+    return pool_leaf.at[pages_row].set(row.astype(pool_leaf.dtype))
+
+
+def _scatter_fn(pool, solo, slot, pages_row, *, stages, page_size):
+    """Write a whole-prompt (path A) solo prefill cache into the pool:
+    full-attention K/V through the slot's page table, every per-slot leaf
+    (ssd/rglru state, rolling windows, cross-attn K/V) into row ``slot``.
+    Pool donated — XLA updates it in place."""
+    out = []
+    for pool_blk, solo_blk, stage in zip(pool, solo, stages):
+        ax = 1 if stage.repeats > 1 else 0
+        nb = {}
+        for i, sp in enumerate(stage.block):
+            pc, sc = pool_blk[f"l{i}"], solo_blk[f"l{i}"]
+            nc = {}
+            for key in pc:
+                pl, sl = pc[key], sc[key]
+                if sp.mixer == "attn" and key in ("k", "v"):
+                    if stage.repeats > 1:
+                        nc[key] = jax.vmap(
+                            lambda a, b: _scatter_attn_leaf(
+                                a, b, pages_row, page_size))(pl, sl)
+                    else:
+                        nc[key] = _scatter_attn_leaf(pl, sl, pages_row,
+                                                     page_size)
+                else:
+                    nc[key] = jax.lax.dynamic_update_slice_in_dim(
+                        pl, sl.astype(pl.dtype), slot, axis=ax)
+            nb[f"l{i}"] = nc
+        out.append(nb)
+    return out
+
+
+def _copy_page_fn(cache, src, dst, *, stages):
+    """Copy page ``src`` -> ``dst`` in every full-attention pool (the
+    device half of copy-on-write ``fork``)."""
+    out = []
+    for blk, stage in zip(cache, stages):
+        nb = {}
+        for i, sp in enumerate(stage.block):
+            c = blk[f"l{i}"]
+            nc = dict(c)
+            if sp.mixer == "attn":
+                for key in ("k", "v"):
+                    leaf = c[key]
+                    if stage.repeats > 1:
+                        nc[key] = jax.vmap(
+                            lambda x: x.at[dst].set(
+                                jnp.take(x, src, axis=0)))(leaf)
+                    else:
+                        nc[key] = leaf.at[dst].set(jnp.take(leaf, src,
+                                                            axis=0))
+            nb[f"l{i}"] = nc
+        out.append(nb)
+    return out
+
+
+def _chunk_jit_name(key: Tuple[int, bool, bool]) -> str:
+    """Profiler name for a chunked-prefill jit. A first-and-last chunk IS a
+    whole prompt, so it keeps the historical ``prefill_len{n}`` name (one
+    compile per distinct prompt length — pinned by tests/test_obs.py);
+    interior/terminal chunks are named by chunk length and position."""
+    length, first, last = key
+    if first and last:
+        return f"prefill_len{length}"
+    name = f"prefill_chunk{length}"
+    if first:
+        name += "_first"
+    if last:
+        name += "_last"
+    return name
+
+
 class Engine:
-    """Continuous-batching engine over a fixed slot pool.
+    """Continuous-batching engine over a paged KV pool.
 
     Parameters
     ----------
     params, cfg : model weights + ModelConfig (any supported family).
     n_slots     : decode-slot pool size (the fused tick's batch dimension).
-    max_len     : per-slot cache capacity; a request needs
+    max_len     : per-slot sequence capacity; a request needs
                   ``len(prompt) + max_new - 1 <= max_len`` (the final
                   generated token never enters the cache).
+    page_size   : tokens per KV page. Default ``min(64, max_len)`` — one
+                  page per slot, which makes the paged engine byte-for-byte
+                  the old monolithic layout (the degenerate config).
+    n_pages     : page-pool capacity (page 0 is the garbage page). Default
+                  ``n_slots * ceil(max_len / page_size) + 1`` — enough for
+                  every slot's worst case, so the page gate never binds;
+                  set it lower to actually oversubscribe memory and let
+                  admission block on pages.
     queue       : optional AdmissionQueue (bounded => backpressure).
     eos_id      : engine-wide EOS (per-request ``Request.eos_id`` overrides).
     enc_len     : enc-dec only — encoder length shared by all requests.
     recorder    : optional ``repro.obs.EngineRecorder``. Default is the
                   no-op ``NullRecorder`` — the tick path then contains no
                   timing calls and no profiled jits. With a recorder, the
-                  engine records per-request TTFT/TPOT + queue-wait, per-
-                  tick phase timings (admit/prefill/write/decode/host — the
-                  write phase absorbs the prefill device sync, so
-                  prefill+write together bound the real prefill latency),
-                  compile events per distinct prompt length, and the
-                  request lifecycle as Chrome trace spans.
+                  engine records per-request TTFT/TPOT + queue-wait,
+                  per-tick phase timings (admit/prefill/decode/host),
+                  page-pool occupancy, prefix-cache hit counters, compile
+                  events, and the request lifecycle as Chrome trace spans.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
-                 max_len: int, queue: Optional[AdmissionQueue] = None,
+                 max_len: int, page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None,
+                 queue: Optional[AdmissionQueue] = None,
                  eos_id: Optional[int] = None, enc_len: int = 0,
                  recorder=None):
         # KAN-FFN archs serve frozen integer artifacts: deploy() runs
@@ -131,36 +239,68 @@ class Engine:
         self.stages = tfm.stages_for(cfg)
         self.mesh = shlib.current_mesh()
 
-        self.cache = dec.init_cache(cfg, n_slots, max_len, enc_len)
+        if page_size is None:
+            page_size = min(64, max_len)
+        if not 1 <= page_size <= max_len:
+            raise ValueError(f"page_size must be in [1, max_len], got "
+                             f"{page_size} (max_len={max_len})")
+        self.page_size = page_size
+        self.n_slot_pages = -(-max_len // page_size)      # table width P
+        if n_pages is None:
+            n_pages = n_slots * self.n_slot_pages + 1
+        self.n_pages = n_pages
+        self.alloc = PagedAllocator(n_pages, page_size)
+        #: chunked-prefill unit (tokens/tick), or None => whole-prompt path
+        self.chunk_tokens = dec.chunk_tokens_for(cfg, page_size)
+        #: hash-matched prompt prefixes may share physical pages
+        self.share_ok = dec.prefix_sharing_ok(cfg)
+
+        self.cache = dec.init_paged_cache(cfg, n_slots, max_len,
+                                          page_size=page_size,
+                                          n_pages=n_pages, enc_len=enc_len)
         if self.mesh is not None:
             shardings = shlib.tree_shardings(self.mesh, self.cache,
-                                             dec.cache_spec(cfg))
+                                             dec.paged_cache_spec(cfg))
             self.cache = jax.device_put(self.cache, shardings)
 
         # host-side per-slot state
-        self.active = np.zeros(n_slots, dtype=bool)
-        self.index = np.zeros(n_slots, dtype=np.int64)   # tokens in cache
+        self.active = np.zeros(n_slots, dtype=bool)       # decoding
+        self.prefilling = np.zeros(n_slots, dtype=bool)   # consuming prompt
+        self.index = np.zeros(n_slots, dtype=np.int64)    # tokens in cache
         self.last_tok = np.zeros(n_slots, dtype=np.int64)
         self.remaining = np.zeros(n_slots, dtype=np.int64)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.slot_tokens: List[List[int]] = [[] for _ in range(n_slots)]
         self.slot_admitted = np.zeros(n_slots, dtype=np.int64)
+        # paging state: page table rows, unspent reservations, prefill
+        # cursor, held prompt + its page digests (prefix registration)
+        self.slot_pages = np.full((n_slots, self.n_slot_pages),
+                                  GARBAGE_PAGE, dtype=np.int32)
+        self.slot_reserved = np.zeros(n_slots, dtype=np.int64)
+        self.slot_pos = np.zeros(n_slots, dtype=np.int64)
+        self.slot_prompt: List[Optional[np.ndarray]] = [None] * n_slots
+        self.slot_hashes: List[List[bytes]] = [[] for _ in range(n_slots)]
 
         self.tick_no = 0
-        self.stats = EngineStats(n_slots=n_slots)
+        self.stats = EngineStats(n_slots=n_slots, page_size=page_size,
+                                 n_pages=n_pages)
         self.obs = recorder if recorder is not None else NullRecorder()
         self._prefill_jit: Dict[Tuple[int, int], object] = {}
+        self._chunk_jit: Dict[Tuple[int, bool, bool], object] = {}
         self._decode_jit = jax.jit(
             functools.partial(_decode_fn, cfg=cfg), donate_argnums=1)
-        self._write_jit = jax.jit(
-            functools.partial(_write_fn, stages=tuple(self.stages)),
+        self._scatter_jit = jax.jit(
+            functools.partial(_scatter_fn, stages=tuple(self.stages),
+                              page_size=page_size), donate_argnums=0)
+        self._copy_jit = jax.jit(
+            functools.partial(_copy_page_fn, stages=tuple(self.stages)),
             donate_argnums=0)
         if self.obs.enabled:
             from repro.obs import profile as obs_profile
             self._decode_jit = obs_profile.JitProfiler(
                 self._decode_jit, "decode_tick", self.obs)
-            self._write_jit = obs_profile.JitProfiler(
-                self._write_jit, "cache_write", self.obs)
+            self._scatter_jit = obs_profile.JitProfiler(
+                self._scatter_jit, "cache_write", self.obs)
 
     def _prefill_for(self, prompt_len: int, enc_len: int):
         key = (prompt_len, enc_len)
@@ -176,11 +316,30 @@ class Engine:
             self._prefill_jit[key] = fn
         return self._prefill_jit[key]
 
+    def _chunk_for(self, length: int, first: bool, last: bool):
+        key = (length, first, last)
+        if key not in self._chunk_jit:
+            fn = jax.jit(functools.partial(
+                _chunk_fn, cfg=self.cfg, first=first, last=last),
+                donate_argnums=1)
+            if self.obs.enabled:
+                from repro.obs import profile as obs_profile
+                fn = obs_profile.JitProfiler(fn, _chunk_jit_name(key),
+                                             self.obs)
+            self._chunk_jit[key] = fn
+        return self._chunk_jit[key]
+
     # -- admission / eviction ----------------------------------------------
+
+    def _worst_case_pages(self, prompt_len: int, max_new: int) -> int:
+        """Pages needed if the request runs to its full budget (the cache
+        holds ``prompt + max_new - 1`` tokens at most)."""
+        return -(-(prompt_len + max_new - 1) // self.page_size)
 
     def submit(self, req: Request) -> bool:
         """Queue a request. False = backpressure (bounded queue full).
-        Raises ValueError for requests that can never fit the slot cache."""
+        Raises ValueError for requests that can never fit the slot cache or
+        the page pool."""
         s = int(np.asarray(req.tokens).shape[-1])
         if req.max_new < 1:
             raise ValueError(f"request {req.rid!r}: max_new must be >= 1")
@@ -188,6 +347,11 @@ class Engine:
             raise ValueError(
                 f"request {req.rid!r}: prompt {s} + max_new {req.max_new} - 1 "
                 f"exceeds slot capacity max_len={self.max_len}")
+        if self._worst_case_pages(s, req.max_new) > self.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid!r}: worst case needs "
+                f"{self._worst_case_pages(s, req.max_new)} pages but the "
+                f"pool only has {self.n_pages - 1} allocatable pages")
         if req.frames is not None:
             f = int(np.asarray(req.frames).shape[-2])
             if f != self.enc_len:
@@ -212,34 +376,117 @@ class Engine:
     def _eos_for(self, req: Request) -> Optional[int]:
         return req.eos_id if req.eos_id is not None else self.eos_id
 
-    def _admit(self, slot: int, req: Request) -> List[Completion]:
+    def _try_admit_pages(self, req: Request):
+        """Transactional page admission for one request: claim shared
+        prefix pages, then reserve the rest of the worst-case demand.
+        Returns (matched page ids, remaining reservation, page digests) or
+        None — with all claims rolled back — when the pool can't cover it
+        (the request then waits at the head of the queue)."""
+        prompt = np.asarray(req.tokens).ravel()
+        s = int(prompt.shape[-1])
+        worst = self._worst_case_pages(s, req.max_new)
+        digests: List[bytes] = []
+        matched: List[int] = []
+        if self.share_ok:
+            digests = page_hashes(prompt, self.page_size)
+            # the page holding the last prompt token is never matched: its
+            # logits must be computed to produce the first output token
+            matched = self.alloc.match_prefix(
+                digests[:(s - 1) // self.page_size])
+        need = worst - len(matched)
+        if not self.alloc.reserve(need):
+            for pid in matched:
+                self.alloc.release(pid)
+            return None
+        return matched, need, digests
+
+    def _admit(self, slot: int, req: Request, matched: List[int],
+               reserved: int, digests: List[bytes]) -> None:
+        """Bind a request to a slot: install matched prefix pages, allocate
+        the pages its prompt will write, and mark the slot prefilling. No
+        device work happens here — the prefill phase consumes the prompt."""
         self.obs.on_admit(req, slot, self.tick_no)
-        toks = jnp.asarray(np.asarray(req.tokens))[None, :]
-        batch = {"tokens": toks}
-        enc_len = 0
-        if req.frames is not None:
-            frames = jnp.asarray(np.asarray(req.frames))[None]
-            batch["frames"] = frames
-            enc_len = frames.shape[1]
-        with self.obs.phase("prefill"):
-            tok0, solo = self._prefill_for(toks.shape[1], enc_len)(
-                self.params, batch)
-        with self.obs.phase("write"):
-            self.cache = self._write_jit(self.cache, solo,
-                                         jnp.asarray(slot, jnp.int32))
-            tok0 = int(np.asarray(tok0)[0])
+        prompt = np.asarray(np.asarray(req.tokens).ravel(), dtype=np.int64)
+        s = int(prompt.shape[-1])
+        n_prompt_pages = -(-s // self.page_size)
+        self.slot_pages[slot, :len(matched)] = matched
+        for i in range(len(matched), n_prompt_pages):
+            self.slot_pages[slot, i] = self.alloc.alloc(reserved=True)
+            reserved -= 1
+        self.slot_reserved[slot] = reserved
+        self.slot_pos[slot] = len(matched) * self.page_size
+        self.slot_prompt[slot] = prompt
+        self.slot_hashes[slot] = digests
+        self.prefilling[slot] = True
+        self.active[slot] = False
+        self.slot_req[slot] = req
+        self.slot_tokens[slot] = []
+        self.slot_admitted[slot] = self.tick_no
+        self.stats.slot_served[slot] += 1
+        if self.share_ok:
+            eligible = (s - 1) // self.page_size
+            self.stats.prefix_hit_pages += len(matched)
+            self.stats.prefix_eligible_pages += eligible
+            self.obs.on_prefix(len(matched), eligible)
+
+    def _prefill_tick(self, slot: int) -> List[Completion]:
+        """Advance one prefilling slot: the whole prompt for single-piece
+        families (path A: solo prefill + scatter through the page table),
+        one ``chunk_tokens`` chunk otherwise (path B). Returns completions
+        when the prompt's first token already satisfies a stop rule."""
+        req = self.slot_req[slot]
+        prompt = self.slot_prompt[slot]
+        s = int(prompt.shape[-1])
+        pages_row = jnp.asarray(self.slot_pages[slot])
+        if self.chunk_tokens is None:
+            toks = jnp.asarray(prompt.astype(np.int32))[None, :]
+            batch = {"tokens": toks}
+            enc_len = 0
+            if req.frames is not None:
+                frames = jnp.asarray(np.asarray(req.frames))[None]
+                batch["frames"] = frames
+                enc_len = frames.shape[1]
+            tok0, solo = self._prefill_for(s, enc_len)(self.params, batch)
+            self.cache = self._scatter_jit(self.cache, solo,
+                                           jnp.asarray(slot, jnp.int32),
+                                           pages_row)
+            return self._finish_prefill(slot, int(np.asarray(tok0)[0]))
+        pos = int(self.slot_pos[slot])
+        length = min(self.chunk_tokens, s - pos)
+        first = pos == 0
+        last = pos + length == s
+        chunk = jnp.asarray(prompt[pos:pos + length].astype(np.int32))[None]
+        tok, self.cache = self._chunk_for(length, first, last)(
+            self.params, self.cache, chunk, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(slot, jnp.int32), pages_row)
+        self.slot_pos[slot] = pos + length
+        self.stats.prefill_chunks += 1
+        if last:
+            return self._finish_prefill(slot, int(np.asarray(tok)[0]))
+        return []
+
+    def _finish_prefill(self, slot: int, tok0: int) -> List[Completion]:
+        """Prompt fully consumed: publish page hashes for prefix reuse,
+        record TTFT, and flip the slot to decoding (it joins this very
+        tick's fused decode)."""
+        req = self.slot_req[slot]
+        s = int(self.slot_prompt[slot].shape[-1])
+        if self.share_ok:
+            # every FULL prompt page is now written and immutable until
+            # eviction: publish for prefix matching (no-op for pages that
+            # were themselves matched — first writer wins)
+            for i, d in enumerate(self.slot_hashes[slot]):
+                self.alloc.register_hash(int(self.slot_pages[slot, i]), d)
         ttft = self.obs.on_first_token(req, self.tick_no)
         if ttft is not None:
             self.stats.ttft_s.append(ttft)
+        self.prefilling[slot] = False
         self.active[slot] = True
-        self.index[slot] = toks.shape[1]
+        self.index[slot] = s
         self.last_tok[slot] = tok0
         self.remaining[slot] = req.max_new - 1
-        self.slot_req[slot] = req
         self.slot_tokens[slot] = [tok0]
-        self.slot_admitted[slot] = self.tick_no
         self.stats.prefills += 1
-        self.stats.slot_served[slot] += 1
         # the prefill token may already satisfy a stop condition
         eos = self._eos_for(req)
         if eos is not None and tok0 == eos:
@@ -255,9 +502,19 @@ class Engine:
             reason=reason, slot=slot,
             admitted_tick=int(self.slot_admitted[slot]),
             finished_tick=self.tick_no)
+        for pg in range(self.n_slot_pages):
+            pid = int(self.slot_pages[slot, pg])
+            if pid != GARBAGE_PAGE:
+                self.alloc.release(pid)
+        self.slot_pages[slot, :] = GARBAGE_PAGE
+        self.alloc.unreserve(int(self.slot_reserved[slot]))
+        self.slot_reserved[slot] = 0
         self.active[slot] = False
+        self.prefilling[slot] = False
         self.slot_req[slot] = None
         self.slot_tokens[slot] = []
+        self.slot_prompt[slot] = None
+        self.slot_hashes[slot] = []
         self.stats.completed += 1
         if reason == "eos":
             self.stats.evicted_eos += 1
@@ -268,30 +525,69 @@ class Engine:
 
     # -- the tick -----------------------------------------------------------
 
+    def _ensure_decode_pages(self) -> None:
+        """Give every active slot a writable page for this tick's token:
+        allocate lazily (consuming the slot's reservation) when the table
+        still points at the garbage page, and copy-on-write fork when the
+        target is shared. The fork path is unreachable by construction —
+        decode only ever writes pages past the registered prompt pages —
+        but it keeps the invariant 'never write refcount>1' local and
+        checkable rather than global and assumed."""
+        for slot in np.flatnonzero(self.active):
+            slot = int(slot)
+            pg = int(self.index[slot]) // self.page_size
+            pid = int(self.slot_pages[slot, pg])
+            if pid == GARBAGE_PAGE:
+                self.slot_pages[slot, pg] = self.alloc.alloc(reserved=True)
+                self.slot_reserved[slot] -= 1
+            elif self.alloc.refcount[pid] > 1:
+                new = self.alloc.fork(pid)
+                self.cache = self._copy_jit(self.cache,
+                                            jnp.asarray(pid, jnp.int32),
+                                            jnp.asarray(new, jnp.int32))
+                self.slot_pages[slot, pg] = new
+
     def step(self) -> List[Completion]:
-        """One engine tick: admit whatever fits, then one fused decode over
-        every slot. Returns the requests completed during this tick."""
+        """One engine tick: admit whatever fits (slots AND pages), advance
+        every prefilling slot by one chunk, then one fused decode over all
+        slots. Returns the requests completed during this tick."""
         done: List[Completion] = []
         obs = self.obs
         with obs.phase("admit"):
-            while not self.active.all():
-                req = self.queue.pop(self.tick_no)
+            while True:
+                free = np.flatnonzero(~self.active & ~self.prefilling)
+                if not len(free):
+                    break
+                req = self.queue.peek(self.tick_no)
                 if req is None:
                     break
-                slot = int(np.flatnonzero(~self.active)[0])
-                done += self._admit(slot, req)
+                adm = self._try_admit_pages(req)
+                if adm is None:
+                    break               # page pool full: head of queue waits
+                self.queue.pop(self.tick_no)
+                self._admit(int(free[0]), req, *adm)
+
+        if self.prefilling.any():
+            with obs.phase("prefill"):
+                for slot in np.flatnonzero(self.prefilling):
+                    done += self._prefill_tick(int(slot))
 
         if self.active.any():
-            # inactive slots still flow through the fused step (static batch
-            # shape); index 0 keeps their garbage writes in-bounds, and their
-            # rows are fully rewritten at the next admission.
+            self._ensure_decode_pages()
+            # inactive/prefilling slots still flow through the fused step
+            # (static batch shape): index 0 keeps their garbage writes
+            # in-bounds and an all-garbage page table keeps them off every
+            # live page.
             tokens = jnp.asarray(np.where(self.active, self.last_tok, 0)
                                  .astype(np.int32))
             index = jnp.asarray(np.where(self.active, self.index, 0)
                                 .astype(np.int32))
+            pages = jnp.asarray(np.where(self.active[:, None],
+                                         self.slot_pages, GARBAGE_PAGE)
+                                .astype(np.int32))
             with obs.phase("decode") as ph:
                 nxt, self.cache = self._decode_jit(self.params, self.cache,
-                                                   tokens, index)
+                                                   tokens, index, pages)
                 nxt = np.asarray(nxt)       # blocks: real decode latency
             n_active = int(self.active.sum())
             if obs.enabled:
@@ -314,8 +610,10 @@ class Engine:
                         done.append(self._evict(slot, "eos"))
                     elif self.remaining[slot] <= 0:
                         done.append(self._evict(slot, "length"))
-        else:
+        elif not self.prefilling.any():
             self.stats.idle_ticks += 1
+        self.stats.pages_in_use_peak = self.alloc.in_use_peak
+        obs.on_page_pool(self.alloc.in_use, self.n_pages)
         self.tick_no += 1
         self.stats.ticks += 1
         return done
@@ -323,14 +621,20 @@ class Engine:
     def adopt_compiled(self, other: "Engine") -> "Engine":
         """Reuse another engine's compiled prefill/tick/write callables —
         warm starts for probe/benchmark engines with identical cfg, slot
-        count, and max_len (the jit caches key on those shapes)."""
-        if (other.cfg, other.n_slots, other.max_len) != (
-                self.cfg, self.n_slots, self.max_len):
+        count, max_len, and page geometry (the jit caches key on those
+        shapes)."""
+        mine = (self.cfg, self.n_slots, self.max_len, self.page_size,
+                self.n_pages)
+        theirs = (other.cfg, other.n_slots, other.max_len, other.page_size,
+                  other.n_pages)
+        if mine != theirs:
             raise ValueError("adopt_compiled: engines differ in "
-                             "cfg/n_slots/max_len")
+                             "cfg/n_slots/max_len/page_size/n_pages")
         self._prefill_jit = other._prefill_jit
+        self._chunk_jit = other._chunk_jit
         self._decode_jit = other._decode_jit
-        self._write_jit = other._write_jit
+        self._scatter_jit = other._scatter_jit
+        self._copy_jit = other._copy_jit
         if self.obs.enabled:
             # re-bind adopted profilers to THIS engine's recorder (sharing
             # their warm compiled caches); raw unprofiled jits are left
@@ -343,11 +647,14 @@ class Engine:
                 return fn
 
             self._decode_jit = rebind(self._decode_jit, "decode_tick")
-            self._write_jit = rebind(self._write_jit, "cache_write")
+            self._scatter_jit = rebind(self._scatter_jit, "cache_write")
             self._prefill_jit = {
                 k: rebind(fn, f"prefill_len{k[0]}"
                           + (f"_enc{k[1]}" if k[1] else ""))
                 for k, fn in other._prefill_jit.items()}
+            self._chunk_jit = {
+                k: rebind(fn, _chunk_jit_name(k))
+                for k, fn in other._chunk_jit.items()}
         return self
 
     def run(self, requests: Sequence[Request] = (),
@@ -364,11 +671,13 @@ class Engine:
         pending = list(requests)
         t0 = time.perf_counter()
         out: List[Completion] = []
-        while pending or self.active.any() or len(self.queue):
+        while (pending or self.active.any() or self.prefilling.any()
+               or len(self.queue)):
             while pending and (self.queue.max_pending is None
                                or len(self.queue) < self.queue.max_pending):
                 self.submit(pending.pop(0))
-            if not self.active.any() and len(self.queue):
+            if (not self.active.any() and not self.prefilling.any()
+                    and len(self.queue)):
                 nxt = self.queue.next_arrival()
                 if nxt is not None and nxt > self.tick_no:
                     skip = nxt - self.tick_no
@@ -390,18 +699,25 @@ class Engine:
 def synth_trace(vocab: int, n_requests: int, *, max_prompt: int = 12,
                 min_prompt: int = 4, max_new: int = 8, min_new: int = 3,
                 stagger: int = 2, n_priorities: int = 2,
-                seed: int = 0) -> List[Request]:
+                common_prefix: int = 0, seed: int = 0) -> List[Request]:
     """Staggered-arrival synthetic trace: request i arrives at tick
     ``i * stagger`` with a random prompt length/budget and a cycling
     priority class — the canonical input for the driver, the benchmark, and
-    the batching-invariance tests."""
+    the batching-invariance tests. ``common_prefix`` prepends that many
+    shared tokens to every prompt (drawn once), which exercises the paged
+    engine's prefix-sharing path on archs where it is enabled; 0 (the
+    default) reproduces the historical traces bit-for-bit."""
     rng = np.random.RandomState(seed)
+    prefix = (rng.randint(0, vocab, size=(common_prefix,)).astype(np.int32)
+              if common_prefix else np.zeros((0,), np.int32))
     reqs = []
     for i in range(n_requests):
         s = int(rng.randint(min_prompt, max_prompt + 1))
+        toks = np.concatenate(
+            [prefix, rng.randint(0, vocab, size=(s,)).astype(np.int32)])
         reqs.append(Request(
             rid=i,
-            tokens=rng.randint(0, vocab, size=(s,)).astype(np.int32),
+            tokens=toks,
             max_new=int(rng.randint(min_new, max_new + 1)),
             priority=i % n_priorities,
             arrival=i * stagger))

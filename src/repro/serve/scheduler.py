@@ -44,6 +44,10 @@ class Request:
 
 @dataclasses.dataclass
 class Completion:
+    """A finished request as handed back by ``Engine.run``/``step``:
+    the generated tokens, the stop reason ("eos" early stop vs "length"
+    budget exhaustion), and the slot/tick coordinates that place it in the
+    obs trace."""
     rid: Any
     tokens: np.ndarray                # [n_generated]
     reason: str                       # "eos" | "length"
@@ -78,6 +82,8 @@ class AdmissionQueue:
         return len(self._ready) + len(self._future)
 
     def submit(self, req: Request) -> bool:
+        """Enqueue a request. False (nothing enqueued) when the queue is at
+        ``max_pending`` — the backpressure signal callers must handle."""
         if self.max_pending is not None and len(self) >= self.max_pending:
             return False
         seq = next(self._seq)
@@ -95,6 +101,19 @@ class AdmissionQueue:
         if not self._ready:
             return None
         return heapq.heappop(self._ready)[1]
+
+    def peek(self, tick: int) -> Optional[Request]:
+        """The request ``pop(tick)`` would return, without removing it.
+
+        The engine peeks to run page-admission checks (reserve worst-case
+        page demand, claim prefix pages) *before* committing to dequeue:
+        when the pool can't cover the head request, it stays queued with
+        its FIFO position intact instead of being popped and re-submitted
+        with a new sequence number."""
+        self._migrate(tick)
+        if not self._ready:
+            return None
+        return self._ready[0][1]
 
     def next_arrival(self) -> Optional[int]:
         """Earliest arrival tick among pending requests (None when empty)."""
@@ -114,7 +133,14 @@ class EngineStats:
     to the next arrival (they are also included in ``idle_ticks`` and
     ``ticks``, so occupancy math is unchanged). ``ttft_s`` / ``tpot_s`` are
     per-request / per-token wall-latency samples, only collected when the
-    engine runs with a recording ``obs`` recorder."""
+    engine runs with a recording ``obs`` recorder.
+
+    Paging counters (filled by the paged engine): ``pages_in_use_peak`` is
+    the high-water mark of live KV pages; ``prefill_chunks`` counts
+    chunked-prefill device calls; ``prefix_hit_pages`` /
+    ``prefix_eligible_pages`` count prompt pages served from the prefix
+    cache vs. prompt pages that were *candidates* for matching (their
+    ratio is the ``prefix_hit_rate`` in ``report()``)."""
     n_slots: int
     ticks: int = 0                    # total ticks (decode + idle)
     idle_ticks: int = 0               # ticks with no active slot
@@ -130,6 +156,12 @@ class EngineStats:
     wall_s: float = 0.0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     tpot_s: List[float] = dataclasses.field(default_factory=list)
+    page_size: int = 0                # KV page size (tokens)
+    n_pages: int = 0                  # pool capacity incl. the garbage page
+    pages_in_use_peak: int = 0        # high-water mark of live pages
+    prefill_chunks: int = 0           # chunked-prefill device calls
+    prefix_hit_pages: int = 0         # prompt pages reused from the cache
+    prefix_eligible_pages: int = 0    # prompt pages that could have matched
 
     def __post_init__(self):
         if not self.slot_served:
@@ -137,9 +169,11 @@ class EngineStats:
 
     @property
     def decode_ticks(self) -> int:
+        """Ticks that ran the fused decode step (total minus idle)."""
         return self.ticks - self.idle_ticks
 
     def mean_occupancy(self) -> float:
+        """Mean fraction of slots active over the decode ticks (0..1]."""
         busy = max(self.decode_ticks, 1)
         return self.occupancy_ticks / (busy * self.n_slots)
 
@@ -159,6 +193,11 @@ class EngineStats:
                 "tpot": self._percentiles(self.tpot_s)}
 
     def report(self) -> dict:
+        """Machine-readable run summary: throughput, occupancy, eviction
+        accounting, latency percentiles, and the paging/prefix-cache
+        columns. This is the dict bench_serve rows are built from, so its
+        keys are part of the BENCH_serve.json schema that
+        benchmarks/records_check.py gates on."""
         wall = self.wall_s or float("nan")
         lat = self.latency_report()
         return {
@@ -183,4 +222,13 @@ class EngineStats:
             if self.wall_s else None,
             "ttft_s": lat["ttft"],
             "tpot_s": lat["tpot"],
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "pages_in_use_peak": self.pages_in_use_peak,
+            "prefill_chunks": self.prefill_chunks,
+            "prefix_hit_pages": self.prefix_hit_pages,
+            "prefix_eligible_pages": self.prefix_eligible_pages,
+            "prefix_hit_rate": round(
+                self.prefix_hit_pages / self.prefix_eligible_pages, 4)
+            if self.prefix_eligible_pages else 0.0,
         }

@@ -257,9 +257,10 @@ def test_new_backends_serve_through_engine(backend):
     assert eng.kan_deployed
     tokens = jnp.zeros((2,), jnp.int32)
     index = jnp.ones((2,), jnp.int32)
+    pages = jnp.zeros((2, eng.n_slot_pages), jnp.int32)
     assert not kan.trace_requantizes(
-        lambda p, c, t, i: engine_lib._decode_fn(p, c, t, i, cfg=m),
-        eng.params, eng.cache, tokens, index)
+        lambda p, c, t, i, g: engine_lib._decode_fn(p, c, t, i, g, cfg=m),
+        eng.params, eng.cache, tokens, index, pages)
     reqs = engine_lib.synth_trace(m.vocab, 4, max_prompt=6, min_prompt=3,
                                   max_new=4, min_new=2, stagger=1)
     assert len(eng.run(reqs)) == 4

@@ -237,9 +237,10 @@ def test_engine_deploys_once_and_decode_tick_is_requant_free(monkeypatch):
 
     tokens = jnp.zeros((2,), jnp.int32)
     index = jnp.ones((2,), jnp.int32)
+    pages = jnp.zeros((2, eng.n_slot_pages), jnp.int32)
     assert not kan.trace_requantizes(
-        lambda p, c, t, i: engine_lib._decode_fn(p, c, t, i, cfg=m),
-        eng.params, eng.cache, tokens, index)
+        lambda p, c, t, i, g: engine_lib._decode_fn(p, c, t, i, g, cfg=m),
+        eng.params, eng.cache, tokens, index, pages)
 
     # belt and braces: serve a real trace with quantization poisoned
     def boom(*a, **k):

@@ -208,8 +208,9 @@ def test_recorded_engine_run_full_stack():
     assert len(prefill_events) == len(prompt_lens)
     assert {e.name for e in prefill_events} == {
         f"prefill_len{n}" for n in prompt_lens}
-    assert {e.name for e in rec.compile_events} >= {"decode_tick",
-                                                    "cache_write"}
+    # chunk-exact archs (mamba2 here) prefill through prefill_chunk jits,
+    # so no whole-prompt scatter ("cache_write") ever compiles
+    assert "decode_tick" in {e.name for e in rec.compile_events}
     assert all(e.wall_s > 0 for e in rec.compile_events)
 
     # --- snapshot describes the run --------------------------------------
@@ -221,7 +222,7 @@ def test_recorded_engine_run_full_stack():
     assert mtr["serve_submitted_total"]["value"] == len(reqs)
     assert mtr['serve_completed_total{reason="length"}']["value"] == len(reqs)
     assert mtr["serve_queue_wait_ticks"]["count"] == len(reqs)
-    for phase in ("admit", "prefill", "write", "decode", "host"):
+    for phase in ("admit", "prefill", "decode", "host"):
         assert mtr[f'serve_tick_phase_seconds{{phase="{phase}"}}']["count"] > 0
     json.dumps(snap)
 
@@ -231,7 +232,7 @@ def test_recorded_engine_run_full_stack():
     assert sum(1 for e in evs if e.get("ph") == "b") == len(reqs)
     assert sum(1 for e in evs if e.get("ph") == "e") == len(reqs)
     assert {e["name"] for e in evs if e.get("ph") == "X"} >= {
-        "admit", "prefill", "write", "decode", "host"}
+        "admit", "prefill", "decode", "host"}
 
     # --- recording must not change the tokens -----------------------------
     plain = Engine(params, m, n_slots=2, max_len=16)

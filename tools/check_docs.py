@@ -1,0 +1,130 @@
+"""Docs consistency gate (CI step, next to benchmarks/records_check.py).
+
+Three checks, all cheap and stdlib-only:
+
+1. **Relative links resolve** — every ``[text](path)`` in README.md and
+   docs/*.md whose target is a relative path (not http/mailto/#anchor)
+   must point at a file or directory that exists in the repo.
+2. **Seam docstrings exist** — the modules listed in ``SEAM_MODULES`` are
+   the teach-from-the-source seams the docs link into; every *public*
+   module-level class/function and every public method of a public class
+   must carry a docstring. (Nested closures and ``_private`` names are
+   exempt — the rule matches the audit in docs/serving.md.)
+3. **README module map is live** — every ``*.py`` file named in the
+   README "Module map" code block must actually exist under ``src/repro``
+   (or ``benchmarks/``/``tools/``), so the map can't silently rot as
+   files move.
+
+Exit non-zero with a problem list on any failure:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# The public API seams the docs pass promises are fully docstringed.
+SEAM_MODULES = [
+    "src/repro/serve/engine.py",
+    "src/repro/serve/scheduler.py",
+    "src/repro/serve/paging.py",
+    "src/repro/core/kan.py",
+    "src/repro/obs/recorder.py",
+]
+
+# [text](target) — markdown inline links; images share the syntax.
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_links(problems: list) -> None:
+    """Every relative markdown link in README.md + docs/ must resolve."""
+    md_files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    for md in md_files:
+        if not md.exists():
+            problems.append(f"links: {md.relative_to(REPO)} missing")
+            continue
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(_EXTERNAL) or target.startswith("#"):
+                continue
+            path = (md.parent / target.split("#")[0]).resolve()
+            if not path.exists():
+                problems.append(
+                    f"links: {md.relative_to(REPO)} -> {target} "
+                    "(target does not exist)")
+
+
+def _public_defs(tree: ast.Module):
+    """Yield (qualname, node) for the symbols the docstring rule covers:
+    top-level public classes/functions plus public methods of public
+    classes. Nested/local defs (closures, decorator factories) are not
+    part of the documented surface."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                yield node.name, node
+        elif isinstance(node, ast.ClassDef) and not node.name.startswith("_"):
+            yield node.name, node
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if not sub.name.startswith("_"):
+                        yield f"{node.name}.{sub.name}", sub
+
+
+def check_docstrings(problems: list) -> None:
+    """Seam modules: module docstring + every public symbol docstringed."""
+    for rel in SEAM_MODULES:
+        path = REPO / rel
+        if not path.exists():
+            problems.append(f"docstrings: {rel} missing (stale SEAM_MODULES?)")
+            continue
+        tree = ast.parse(path.read_text())
+        if not ast.get_docstring(tree):
+            problems.append(f"docstrings: {rel} has no module docstring")
+        for qualname, node in _public_defs(tree):
+            if not ast.get_docstring(node):
+                problems.append(
+                    f"docstrings: {rel}:{node.lineno} {qualname} "
+                    "is public but undocumented")
+
+
+_MODULE_MAP_PY = re.compile(r"\b([A-Za-z_][\w]*\.py)\b")
+
+
+def check_module_map(problems: list) -> None:
+    """Every *.py named in the README module-map block must exist."""
+    text = (REPO / "README.md").read_text()
+    m = re.search(r"## Module map\s+```\n(.*?)```", text, re.DOTALL)
+    if not m:
+        problems.append("module-map: README.md has no '## Module map' block")
+        return
+    roots = [REPO / "src" / "repro", REPO / "benchmarks", REPO / "tools"]
+    for name in sorted(set(_MODULE_MAP_PY.findall(m.group(1)))):
+        if not any(next(root.rglob(name), None) for root in roots if
+                   root.exists()):
+            problems.append(
+                f"module-map: README names {name} but no such file exists "
+                "under src/repro, benchmarks/ or tools/")
+
+
+def main() -> int:
+    problems: list = []
+    check_links(problems)
+    check_docstrings(problems)
+    check_module_map(problems)
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print("check_docs: OK (links, seam docstrings, module map)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
