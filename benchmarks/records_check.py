@@ -15,8 +15,12 @@ Checks
   cell), every row ``ok`` with the required metrics, row-level ``smoke``
   flags consistent with the entry-level flag, the KAN-FFN arch present,
   its row proving the deploy-once contract (``kan_deployed`` +
-  ``requant_free``), and at least one row proving prefix-page reuse
-  (``prefix_hit_rate > 0`` — the bench trace shares a prompt prefix).
+  ``requant_free``), at least one row proving prefix-page reuse
+  (``prefix_hit_rate > 0`` — the bench trace shares a prompt prefix), and
+  the multi-replica router weak-scaling rows (one per replica count in
+  ``replica_scaling``): zero lost requests each, with the max-replica row
+  holding ``scaling_efficiency >= 0.8`` (0.8x linear modeled scaling —
+  the router-regression gate).
 * ``results/BENCH_chip.json`` — schema ``bench_chip/v1``, append-only
   history, and for the latest entry: one row per (As, mapping) cell of the
   requested sweep (no silently-missing cells), every row ``ok`` with sane
@@ -50,7 +54,8 @@ EXPECTED_KERNEL_MODULES = {
     "benchmarks.bench_kernels",
 }
 KERNEL_ROW_KEYS = {"module", "name", "us_per_call", "derived"}
-SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
+SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "replicas", "n_slots",
+                  "requests",
                   "completed", "requests_per_s", "tokens_per_s",
                   "mean_occupancy", "slot_reuse", "ticks",
                   # latency percentiles + compile accounting (obs layer):
@@ -65,6 +70,15 @@ SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "n_slots", "requests",
                   "prefill_chunks", "prefix_hit_rate"}
 SERVE_LATENCY_KEYS = ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
                       "tpot_p50_s", "tpot_p95_s", "tpot_p99_s")
+# multi-replica router weak-scaling rows (bench_serve appends one per
+# replica count): identified by the modeled-concurrency aggregate column
+SCALING_ROW_KEYS = {"arch", "family", "smoke", "ok", "replicas", "n_slots",
+                    "requests", "completed", "tokens", "routed", "busy_s",
+                    "busy_s_max", "router_s", "agg_tokens_per_s",
+                    "scaling_efficiency"}
+# CI gate: the max-replica scaling row must stay within 0.8x of linear —
+# a router or placement regression shows up here before it ships
+SCALING_EFFICIENCY_FLOOR = 0.8
 OBS_SCHEMA = "obs/v1"
 # the CI serving sweep must include the KAN-FFN arch on BOTH serving
 # backends (lut + the int8-MXU lut_int8): each row proves the deploy-once
@@ -148,6 +162,64 @@ def _check_history(rec, schema: str, path: str, problems: List[str]):
     return history[-1]
 
 
+def _check_scaling_rows(entry, rows, path: str, problems: List[str]) -> None:
+    """Validate the multi-replica router weak-scaling rows of the latest
+    BENCH_serve entry: one row per requested replica count (no
+    silently-missing cells), zero lost requests per row, dispatch
+    accounting intact, and the max-replica row holding the
+    ``scaling_efficiency >= 0.8`` floor (0.8x linear modeled scaling — the
+    router-regression CI gate)."""
+    counts = entry.get("replica_scaling")
+    scaling_rows = [r for r in rows if "agg_tokens_per_s" in r]
+    if not counts:
+        problems.append(
+            f"{path}: latest entry has no replica_scaling sweep (fresh "
+            "entries must carry the multi-replica router rows — run "
+            "bench_serve without --no-scaling)")
+        return
+    got = {r.get("replicas") for r in scaling_rows if r.get("ok") is True}
+    if set(counts) - got:
+        problems.append(f"{path}: latest entry missing scaling rows for "
+                        f"replica counts {sorted(set(counts) - got)} "
+                        "(silently-missing cells)")
+    for row in scaling_rows:
+        arch = row.get("arch", "?")
+        if row.get("ok") is not True:
+            continue  # reported by the main row loop
+        missing = SCALING_ROW_KEYS - set(row)
+        if missing:
+            problems.append(f"{path}: scaling row {arch!r} missing keys "
+                            f"{sorted(missing)}")
+            continue
+        n = row["replicas"]
+        if row["completed"] != row["requests"]:
+            problems.append(f"{path}: scaling row {arch!r} lost requests "
+                            f"(completed {row['completed']} != "
+                            f"{row['requests']})")
+        if len(row["busy_s"]) != n or len(row["routed"]) != n:
+            problems.append(f"{path}: scaling row {arch!r} has "
+                            f"{len(row['busy_s'])} busy walls / "
+                            f"{len(row['routed'])} routed counts for "
+                            f"{n} replicas")
+        elif sum(row["routed"]) < row["requests"]:
+            problems.append(f"{path}: scaling row {arch!r} dispatch "
+                            f"accounting short: routed {row['routed']} < "
+                            f"{row['requests']} requests")
+        agg = row["agg_tokens_per_s"]
+        if not (isinstance(agg, (int, float)) and agg > 0):
+            problems.append(f"{path}: scaling row {arch!r} has bad "
+                            f"agg_tokens_per_s {agg!r}")
+        eff = row["scaling_efficiency"]
+        if not (isinstance(eff, (int, float)) and eff > 0):
+            problems.append(f"{path}: scaling row {arch!r} has bad "
+                            f"scaling_efficiency {eff!r}")
+        elif n == max(counts) and eff < SCALING_EFFICIENCY_FLOOR:
+            problems.append(
+                f"{path}: scaling row {arch!r} regressed: "
+                f"scaling_efficiency {eff} < {SCALING_EFFICIENCY_FLOOR} "
+                f"({n}-replica modeled throughput fell below 0.8x linear)")
+
+
 def check_serve(path: str, problems: List[str]) -> None:
     rec = _load(path, problems)
     if rec is None:
@@ -171,12 +243,15 @@ def check_serve(path: str, problems: List[str]) -> None:
         problems.append(f"{path}: latest entry did not request "
                         f"{sorted(REQUIRED_SERVE_ARCHS - expected)} (the CI "
                         "serving sweep must cover the KAN deployed path)")
+    _check_scaling_rows(entry, rows, path, problems)
     for row in rows:
         arch = row.get("arch", "?")
         if row.get("ok") is not True:
             problems.append(f"{path}: latest entry row {arch!r} not ok: "
                             f"{row.get('error', 'no error recorded')}")
             continue
+        if "agg_tokens_per_s" in row:
+            continue  # router weak-scaling row, validated above
         missing = SERVE_ROW_KEYS - set(row)
         if missing:
             problems.append(f"{path}: latest entry row {arch!r} missing "

@@ -8,6 +8,16 @@ only builds params, synthesizes a staggered-arrival trace, optionally enters
 a host mesh (``--mesh-model N`` shards the slot pool via dist.sharding), runs
 the engine, and prints the EngineStats report.
 
+``--replicas N`` serves the trace through ``repro.serve.router`` instead:
+N data-parallel engines share ONE deployed artifact (replica 0's params —
+KAN deploy runs once) and ``adopt_compiled`` each other so compile cost is
+paid once; the router owns the global queue, scores load/prefix-affinity
+per dispatch, and prints the RouterStats aggregate. Mutually exclusive
+with ``--mesh-model`` (a replica is whole-model by construction).
+``--drain-tick T`` schedules a mid-trace drain of ``--drain-replica`` —
+its in-flight requests requeue onto the survivors and ``--check`` still
+requires full completion (the zero-lost-requests CI gate).
+
 ``--check`` is the CI smoke gate: it plants an EOS on request 0 (probed from
 a solo run so the request genuinely stops early), then asserts slot reuse
 (>1 request served by some slot), at least one EOS eviction, and that every
@@ -59,6 +69,16 @@ def main(argv=None):
     ap.add_argument("--mesh-model", type=int, default=0,
                     help="enter a (data x model) host mesh with this many "
                          "model ways (0 = no mesh)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through the multi-replica router with this "
+                         "many data-parallel engines (1 = single engine, "
+                         "the historical path; incompatible with "
+                         "--mesh-model)")
+    ap.add_argument("--drain-tick", type=int, default=0,
+                    help="router path only: schedule a drain of "
+                         "--drain-replica at this tick (0 = no drain)")
+    ap.add_argument("--drain-replica", type=int, default=1,
+                    help="replica index --drain-tick evacuates")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kan-backend", default="",
                     help="override ModelConfig.kan_backend for KAN-FFN "
@@ -74,6 +94,11 @@ def main(argv=None):
                     help="write the obs/v1 metrics snapshot JSON; enables "
                          "recording")
     args = ap.parse_args(argv)
+
+    if args.replicas > 1 and args.mesh_model:
+        raise SystemExit("--replicas and --mesh-model are mutually "
+                         "exclusive: a router replica holds the whole "
+                         "model on its own device(s)")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     m = arch.model
@@ -103,28 +128,65 @@ def main(argv=None):
         from repro.obs import EngineRecorder
         recorder = EngineRecorder()
 
+    router = None
     with mesh_ctx:
         queue = AdmissionQueue(args.queue_cap or None)
-        eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
-                     queue=queue, recorder=recorder, **page_kw)
-        eos_planted = args.check and args.new_tokens >= 3
-        if eos_planted:
-            # plant a genuine early stop: request 0's EOS is its own 2nd
-            # token. Probe through an IDENTICAL engine (same mesh, same slot
-            # count => same fused-tick shapes): under a mesh the partitioned
-            # reduction order depends on the batch shape, so a B=1 generate()
-            # probe can argmax-diverge from the pooled decode on a random-
-            # init model whose logits are nearly flat. The probe shares the
-            # recorder, so its compile events survive adopt_compiled.
-            probe_eng = Engine(params, m, n_slots=args.slots,
-                               max_len=max_len, recorder=recorder, **page_kw)
-            probe = probe_eng.run([Request(rid="probe",
-                                           tokens=reqs[0].tokens,
-                                           max_new=2)])
-            reqs[0].eos_id = int(probe[0].tokens[1])
-            # the probe compiled the same prefill length + tick: reuse them
-            eng.adopt_compiled(probe_eng)
-        comps = eng.run(reqs)
+        if args.replicas > 1:
+            from repro.serve.router import Router
+
+            def rec_for(i):
+                return recorder.for_replica(i) if recorder else None
+
+            eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
+                         recorder=rec_for(0), **page_kw)
+            eos_planted = args.check and args.new_tokens >= 3
+            if eos_planted:
+                # same planted-EOS probe as the single-engine path: identical
+                # geometry, warm caches adopted by replica 0
+                probe_eng = Engine(params, m, n_slots=args.slots,
+                                   max_len=max_len, recorder=rec_for(0),
+                                   **page_kw)
+                probe = probe_eng.run([Request(rid="probe",
+                                               tokens=reqs[0].tokens,
+                                               max_new=2)])
+                reqs[0].eos_id = int(probe[0].tokens[1])
+                eng.adopt_compiled(probe_eng)
+            # replicas 1..N-1 share replica 0's DEPLOYED params (KAN deploy
+            # is idempotent: one frozen artifact serves the whole fleet) and
+            # its warm jit caches (compile cost paid once)
+            replicas = [eng]
+            for i in range(1, args.replicas):
+                replicas.append(
+                    Engine(eng.params, m, n_slots=args.slots,
+                           max_len=max_len, recorder=rec_for(i),
+                           **page_kw).adopt_compiled(eng))
+            router = Router(replicas, queue=queue, recorder=recorder)
+            if args.drain_tick:
+                router.schedule_drain(args.drain_replica, args.drain_tick)
+            comps = router.run(reqs)
+        else:
+            eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
+                         queue=queue, recorder=recorder, **page_kw)
+            eos_planted = args.check and args.new_tokens >= 3
+            if eos_planted:
+                # plant a genuine early stop: request 0's EOS is its own 2nd
+                # token. Probe through an IDENTICAL engine (same mesh, same
+                # slot count => same fused-tick shapes): under a mesh the
+                # partitioned reduction order depends on the batch shape, so
+                # a B=1 generate() probe can argmax-diverge from the pooled
+                # decode on a random-init model whose logits are nearly
+                # flat. The probe shares the recorder, so its compile events
+                # survive adopt_compiled.
+                probe_eng = Engine(params, m, n_slots=args.slots,
+                                   max_len=max_len, recorder=recorder,
+                                   **page_kw)
+                probe = probe_eng.run([Request(rid="probe",
+                                               tokens=reqs[0].tokens,
+                                               max_new=2)])
+                reqs[0].eos_id = int(probe[0].tokens[1])
+                # the probe compiled the same prefill length + tick: reuse
+                eng.adopt_compiled(probe_eng)
+            comps = eng.run(reqs)
 
     if recorder is not None:
         if eng.kan_deployed and m.kan_backend == "cim_tiled":
@@ -150,12 +212,12 @@ def main(argv=None):
         if args.metrics_out:
             print(f"metrics -> {recorder.export_metrics(args.metrics_out)}")
 
-    rep = eng.stats.report()
+    rep = router.report() if router is not None else eng.stats.report()
     kan_note = (f" kan_backend={m.kan_backend} (deployed once)"
                 if eng.kan_deployed else "")
     print(f"arch={m.name} slots={args.slots} requests={args.requests} "
-          f"stagger={args.stagger} mesh_model={args.mesh_model or 'none'}"
-          f"{kan_note}")
+          f"stagger={args.stagger} mesh_model={args.mesh_model or 'none'} "
+          f"replicas={args.replicas}{kan_note}")
     print(json.dumps(rep, indent=1))
     for c in comps[:4]:
         print(f"  rid={c.rid} reason={c.reason} slot={c.slot} "
@@ -164,18 +226,43 @@ def main(argv=None):
 
     if args.check:
         problems = []
-        if rep["completed"] != args.requests:
-            problems.append(f"completed {rep['completed']} != "
-                            f"{args.requests} submitted")
-        if rep["slot_reuse"] <= 1:
-            problems.append(f"no slot reuse: slot_served={rep['slot_served']}")
-        if eos_planted and rep["evicted_eos"] < 1:
-            problems.append("no EOS eviction observed")
-        if rep["evicted_eos"] + rep["evicted_length"] != rep["completed"]:
-            problems.append("eviction accounting does not add up")
-        if problems:
-            raise SystemExit("engine check FAILED: " + "; ".join(problems))
-        print("engine check OK: slot reuse, EOS eviction, full completion")
+        if router is not None:
+            per = rep["per_replica"]
+            if rep["completed"] != args.requests:
+                problems.append(f"lost requests: completed "
+                                f"{rep['completed']} != {args.requests} "
+                                "submitted")
+            if sum(rep["routed"]) != args.requests + rep["requeued"]:
+                problems.append(
+                    f"dispatch accounting does not add up: routed "
+                    f"{rep['routed']} vs {args.requests} requests + "
+                    f"{rep['requeued']} requeued")
+            if max(r["slot_reuse"] for r in per) <= 1:
+                problems.append("no slot reuse on any replica")
+            if eos_planted and sum(r["evicted_eos"] for r in per) < 1:
+                problems.append("no EOS eviction observed")
+            if args.drain_tick and rep["drains"] < 1:
+                problems.append("scheduled drain never fired")
+            if problems:
+                raise SystemExit("router check FAILED: " + "; ".join(problems))
+            print(f"router check OK: zero lost requests "
+                  f"({rep['completed']}/{args.requests} completed, "
+                  f"{rep['requeued']} requeued), slot reuse, EOS eviction")
+        else:
+            if rep["completed"] != args.requests:
+                problems.append(f"completed {rep['completed']} != "
+                                f"{args.requests} submitted")
+            if rep["slot_reuse"] <= 1:
+                problems.append(
+                    f"no slot reuse: slot_served={rep['slot_served']}")
+            if eos_planted and rep["evicted_eos"] < 1:
+                problems.append("no EOS eviction observed")
+            if rep["evicted_eos"] + rep["evicted_length"] != rep["completed"]:
+                problems.append("eviction accounting does not add up")
+            if problems:
+                raise SystemExit("engine check FAILED: " + "; ".join(problems))
+            print("engine check OK: slot reuse, EOS eviction, full "
+                  "completion")
 
 
 if __name__ == "__main__":

@@ -74,6 +74,10 @@ class NullRecorder:
     def on_evict(self, comp) -> None:
         """Request left its slot (eos or length)."""
 
+    def on_preempt(self, req, slot: int) -> None:
+        """Request forcibly evicted mid-flight (replica drain); the router
+        will requeue it, which re-fires ``on_submit``."""
+
     def on_page_pool(self, in_use: int, n_pages: int) -> None:
         """Per-tick page-pool occupancy."""
 
@@ -90,46 +94,86 @@ class NullRecorder:
 
 class EngineRecorder(NullRecorder):
     """Metrics + trace + compile profiling for one engine (or several —
-    sharing one recorder across engines merges their telemetry)."""
+    sharing one recorder across engines merges their telemetry).
+
+    ``labels`` (optional) is merged into every metric this recorder
+    creates: the multi-replica router builds one child per replica via
+    :meth:`for_replica`, so each engine's counters land on distinct
+    ``{replica="i"}``-labelled series in the *shared* registry while trace
+    spans, compile events, and the request TTFT clock stay merged (a
+    request submitted at the router and first-tokened on a replica still
+    gets one coherent TTFT sample and one balanced async span)."""
 
     enabled = True
 
     def __init__(self, *, registry: Optional[MetricsRegistry] = None,
                  trace: Optional[TraceRecorder] = None,
-                 trace_capacity: int = 65536):
+                 trace_capacity: int = 65536,
+                 labels: Optional[Dict[str, str]] = None):
         self.metrics = registry if registry is not None else MetricsRegistry()
         self.trace = (trace if trace is not None
                       else TraceRecorder(capacity=trace_capacity))
+        self.labels = dict(labels) if labels else None
         self.compile_events: list = []
         # rid -> (submit wall perf_counter, submit tick)
         self._submitted: Dict[object, Tuple[float, int]] = {}
         m = self.metrics
+        lbl = self._labels
         self._submitted_c = m.counter(
-            "serve_submitted_total", "requests accepted by the queue")
+            "serve_submitted_total", "requests accepted by the queue",
+            labels=lbl())
         self._rejected_c = m.counter(
-            "serve_rejected_total", "submits refused (backpressure)")
+            "serve_rejected_total", "submits refused (backpressure)",
+            labels=lbl())
         self._prefill_c = m.counter(
-            "serve_prefill_total", "prefill-on-admit runs")
+            "serve_prefill_total", "prefill-on-admit runs", labels=lbl())
         self._queue_wait_h = m.histogram(
             "serve_queue_wait_ticks", "ticks between arrival and admission",
-            buckets=QUEUE_WAIT_BUCKETS)
+            buckets=QUEUE_WAIT_BUCKETS, labels=lbl())
         self._ttft_h = m.histogram(
-            "serve_ttft_seconds", "submit -> first token (prefill) latency")
+            "serve_ttft_seconds", "submit -> first token (prefill) latency",
+            labels=lbl())
         self._tpot_h = m.histogram(
             "serve_tpot_seconds", "per-token decode latency (fused tick "
-            "wall time, one observation per token generated)")
+            "wall time, one observation per token generated)", labels=lbl())
         self._active_g = m.gauge(
-            "serve_active_slots", "slots decoding in the latest tick")
+            "serve_active_slots", "slots decoding in the latest tick",
+            labels=lbl())
         self._tokens_c = m.counter(
-            "serve_decode_tokens_total", "tokens produced by decode ticks")
+            "serve_decode_tokens_total", "tokens produced by decode ticks",
+            labels=lbl())
         self._pages_g = m.gauge(
-            "serve_pages_in_use", "live KV pages after the latest tick")
+            "serve_pages_in_use", "live KV pages after the latest tick",
+            labels=lbl())
         self._prefix_hit_c = m.counter(
             "serve_prefix_hit_total", "prompt pages served from the prefix "
-            "cache (physical page shared, prefill skipped)")
+            "cache (physical page shared, prefill skipped)", labels=lbl())
         self._prefix_query_c = m.counter(
             "serve_prefix_query_total", "prompt pages eligible for prefix "
-            "matching at admission")
+            "matching at admission", labels=lbl())
+
+    def _labels(self, extra: Optional[Dict[str, str]] = None):
+        """This recorder's base labels merged with ``extra``; None when
+        both are empty, so an unlabelled recorder keeps the historical
+        bare metric keys byte-for-byte."""
+        if not self.labels:
+            return extra
+        if not extra:
+            return self.labels
+        return {**self.labels, **extra}
+
+    def for_replica(self, replica) -> "EngineRecorder":
+        """A child recorder for one router replica: same registry, trace
+        buffer, compile-event list, and submit clock; metrics additionally
+        labelled ``{replica="..."}``. Give each replica engine its child
+        and the router the parent — ``snapshot()`` on any of them sees the
+        whole topology."""
+        child = EngineRecorder(
+            registry=self.metrics, trace=self.trace,
+            labels=self._labels({"replica": str(replica)}))
+        child.compile_events = self.compile_events
+        child._submitted = self._submitted
+        return child
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -179,13 +223,27 @@ class EngineRecorder(NullRecorder):
         """Close the request's trace span and count the stop reason."""
         self.metrics.counter("serve_completed_total",
                              "completions by stop reason",
-                             labels={"reason": comp.reason}).inc()
+                             labels=self._labels({"reason": comp.reason})
+                             ).inc()
         self._submitted.pop(comp.rid, None)
         self.trace.end_async(
             "request", comp.rid,
             args={"rid": str(comp.rid), "reason": comp.reason,
                   "slot": comp.slot, "n_tokens": len(comp.tokens),
                   "ticks": comp.finished_tick - comp.admitted_tick})
+
+    def on_preempt(self, req, slot: int) -> None:
+        """Drain evicted an in-flight request. Ends the async span (reason
+        "preempt") so begin/end stay balanced — the router's requeue fires
+        ``on_submit`` again, opening a fresh span and restarting the TTFT
+        clock for the retried attempt."""
+        self.metrics.counter("serve_preempted_total",
+                             "in-flight requests evicted by replica drain",
+                             labels=self._labels()).inc()
+        self._submitted.pop(req.rid, None)
+        self.trace.end_async("request", req.rid,
+                             args={"rid": str(req.rid), "reason": "preempt",
+                                   "slot": slot})
 
     # -- paging --------------------------------------------------------------
 
@@ -210,7 +268,7 @@ class EngineRecorder(NullRecorder):
         histogram and a nested trace span."""
         hist = self.metrics.histogram("serve_tick_phase_seconds",
                                       "engine tick phase wall time",
-                                      labels={"phase": name})
+                                      labels=self._labels({"phase": name}))
         return _PhaseTimer(self, name, hist)
 
     # -- compiles ------------------------------------------------------------

@@ -1,6 +1,8 @@
-"""Serving: single-shot prefill/decode primitives (``repro.serve.decode``)
-and the continuous-batching engine built on them (``repro.serve.engine`` +
-``repro.serve.scheduler``)."""
+"""Serving: single-shot prefill/decode primitives (``repro.serve.decode``),
+the continuous-batching engine built on them (``repro.serve.engine`` +
+``repro.serve.scheduler``), and the multi-replica router that spreads one
+admission queue across N data-parallel engines (``repro.serve.router``)."""
 from repro.serve.engine import Engine, generate_dynamic, synth_trace  # noqa: F401
+from repro.serve.router import Router, RouterStats  # noqa: F401
 from repro.serve.scheduler import (AdmissionQueue, Completion,  # noqa: F401
                                    EngineStats, Request)

@@ -209,6 +209,12 @@ class Engine:
     queue       : optional AdmissionQueue (bounded => backpressure).
     eos_id      : engine-wide EOS (per-request ``Request.eos_id`` overrides).
     enc_len     : enc-dec only — encoder length shared by all requests.
+    device      : optional ``jax.Device`` to pin this engine's params and
+                  cache to (``jax.device_put``). Used by the multi-replica
+                  router/bench to place data-parallel replicas on distinct
+                  devices of the host mesh; mutually exclusive with an
+                  active sharding mesh. Default None = jax's default
+                  placement (unchanged single-engine behavior).
     recorder    : optional ``repro.obs.EngineRecorder``. Default is the
                   no-op ``NullRecorder`` — the tick path then contains no
                   timing calls and no profiled jits. With a recorder, the
@@ -223,7 +229,7 @@ class Engine:
                  n_pages: Optional[int] = None,
                  queue: Optional[AdmissionQueue] = None,
                  eos_id: Optional[int] = None, enc_len: int = 0,
-                 recorder=None):
+                 device=None, recorder=None):
         # KAN-FFN archs serve frozen integer artifacts: deploy() runs
         # EXACTLY ONCE here, so the prefill/decode hot paths contain no
         # coefficient quantization or LUT construction (pinned by
@@ -259,9 +265,18 @@ class Engine:
                                           page_size=page_size,
                                           n_pages=n_pages, enc_len=enc_len)
         if self.mesh is not None:
+            if device is not None:
+                raise ValueError("Engine: device placement and an active "
+                                 "sharding mesh are mutually exclusive — "
+                                 "a replica is either pinned whole to one "
+                                 "device or sharded across the mesh")
             shardings = shlib.tree_shardings(self.mesh, self.cache,
                                              dec.paged_cache_spec(cfg))
             self.cache = jax.device_put(self.cache, shardings)
+        elif device is not None:
+            self.params = jax.device_put(self.params, device)
+            self.cache = jax.device_put(self.cache, device)
+        self.device = device
 
         # host-side per-slot state
         self.active = np.zeros(n_slots, dtype=bool)       # decoding
@@ -336,10 +351,13 @@ class Engine:
         holds ``prompt + max_new - 1`` tokens at most)."""
         return -(-(prompt_len + max_new - 1) // self.page_size)
 
-    def submit(self, req: Request) -> bool:
-        """Queue a request. False = backpressure (bounded queue full).
-        Raises ValueError for requests that can never fit the slot cache or
-        the page pool."""
+    def validate_request(self, req: Request) -> None:
+        """Raise ValueError for a request that can never be served by this
+        engine's geometry: non-positive budget, over-length vs the slot
+        cache, worst-case page demand beyond the pool, or an enc-dec
+        frames mismatch. Shared by ``submit`` and the multi-replica router
+        (replicas are geometry-homogeneous, so one replica's verdict holds
+        for all)."""
         s = int(np.asarray(req.tokens).shape[-1])
         if req.max_new < 1:
             raise ValueError(f"request {req.rid!r}: max_new must be >= 1")
@@ -365,6 +383,12 @@ class Engine:
             raise ValueError(f"request {req.rid!r}: engine was built with "
                              f"enc_len={self.enc_len} but request has no "
                              "frames")
+
+    def submit(self, req: Request) -> bool:
+        """Queue a request. False = backpressure (bounded queue full).
+        Raises ValueError for requests that can never fit the slot cache or
+        the page pool."""
+        self.validate_request(req)
         ok = self.queue.submit(req)
         if ok:
             self.obs.on_submit(req, self.tick_no)
@@ -495,13 +519,27 @@ class Engine:
             return [self._evict(slot, "length")]
         return []
 
-    def _evict(self, slot: int, reason: str) -> Completion:
-        req = self.slot_req[slot]
-        comp = Completion(
-            rid=req.rid, tokens=np.asarray(self.slot_tokens[slot]),
-            reason=reason, slot=slot,
-            admitted_tick=int(self.slot_admitted[slot]),
-            finished_tick=self.tick_no)
+    def try_admit(self, req: Request) -> bool:
+        """Transactional slot+page admission that bypasses the local
+        queue: True binds ``req`` to a free slot (prefill starts next
+        ``step``), False changes nothing — no free slot, or the page pool
+        can't cover the worst case right now. This is the replica-facing
+        seam the multi-replica router dispatches through: the router owns
+        the *global* queue and its FIFO discipline, so the engine must
+        not interpose its own."""
+        free = np.flatnonzero(~self.active & ~self.prefilling)
+        if not len(free):
+            return False
+        adm = self._try_admit_pages(req)
+        if adm is None:
+            return False
+        self._admit(int(free[0]), req, *adm)
+        return True
+
+    def _release_slot(self, slot: int) -> None:
+        """Free a slot's pages (shared pages drop one reference), return
+        unspent reservations, and clear all per-slot host state. Common
+        tail of ``_evict`` (normal completion) and ``preempt`` (drain)."""
         for pg in range(self.n_slot_pages):
             pid = int(self.slot_pages[slot, pg])
             if pid != GARBAGE_PAGE:
@@ -515,6 +553,15 @@ class Engine:
         self.slot_tokens[slot] = []
         self.slot_prompt[slot] = None
         self.slot_hashes[slot] = []
+
+    def _evict(self, slot: int, reason: str) -> Completion:
+        req = self.slot_req[slot]
+        comp = Completion(
+            rid=req.rid, tokens=np.asarray(self.slot_tokens[slot]),
+            reason=reason, slot=slot,
+            admitted_tick=int(self.slot_admitted[slot]),
+            finished_tick=self.tick_no)
+        self._release_slot(slot)
         self.stats.completed += 1
         if reason == "eos":
             self.stats.evicted_eos += 1
@@ -522,6 +569,28 @@ class Engine:
             self.stats.evicted_length += 1
         self.obs.on_evict(comp)
         return comp
+
+    def preempt(self, slot: int) -> Request:
+        """Forcibly evict the request bound to ``slot`` and hand it back
+        for requeueing elsewhere. All progress is discarded — pages,
+        reservations, and any generated tokens (greedy decoding is
+        deterministic, so a clean re-run elsewhere emits the identical
+        token sequence; resuming mid-stream would need page migration
+        across replica pools). Drain-time tool of the router."""
+        req = self.slot_req[slot]
+        if req is None:
+            raise ValueError(f"preempt: slot {slot} is idle")
+        self._release_slot(slot)
+        self.stats.preempted += 1
+        self.obs.on_preempt(req, slot)
+        return req
+
+    def drain_queued(self) -> List[Request]:
+        """Remove and return every request still waiting in the local
+        admission queue (pop order). With the router, the local queue is
+        unused and this returns [] — it exists so drain handles engines
+        that were also fed directly."""
+        return self.queue.drain()
 
     # -- the tick -----------------------------------------------------------
 

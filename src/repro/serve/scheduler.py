@@ -81,10 +81,15 @@ class AdmissionQueue:
     def __len__(self) -> int:
         return len(self._ready) + len(self._future)
 
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request, *, force: bool = False) -> bool:
         """Enqueue a request. False (nothing enqueued) when the queue is at
-        ``max_pending`` — the backpressure signal callers must handle."""
-        if self.max_pending is not None and len(self) >= self.max_pending:
+        ``max_pending`` — the backpressure signal callers must handle.
+        ``force=True`` bypasses the bound: the router uses it when
+        requeueing preempted in-flight requests from a draining replica,
+        where refusing would *lose* an already-accepted request (integrity
+        beats backpressure for work the system has committed to)."""
+        if (not force and self.max_pending is not None
+                and len(self) >= self.max_pending):
             return False
         seq = next(self._seq)
         heapq.heappush(self._future, (req.arrival, seq, req))
@@ -122,6 +127,23 @@ class AdmissionQueue:
             candidates.append(self._future[0][0])
         return min(candidates, default=None)
 
+    def drain(self) -> List[Request]:
+        """Remove and return every queued request in pop order: ready
+        requests by ``(-priority, seq)``, then not-yet-arrived ones by
+        ``(arrival, seq)``. The router drains a removed replica's local
+        backlog through this and resubmits it to the global queue; the
+        returned requests keep their original arrival ticks."""
+        out = [heapq.heappop(self._ready)[1] for _ in range(len(self._ready))]
+        while self._future:
+            out.append(heapq.heappop(self._future)[2])
+        return out
+
+
+#: the explicit zero-sample latency shape: every percentile is None (JSON
+#: null), never NaN — ``json.dumps(..., allow_nan=False)`` stays valid and
+#: records_check's latency gates can tell "unrecorded" from "broken"
+EMPTY_PERCENTILES = {"p50": None, "p95": None, "p99": None, "n": 0}
+
 
 @dataclasses.dataclass
 class EngineStats:
@@ -151,6 +173,7 @@ class EngineStats:
     evicted_eos: int = 0
     evicted_length: int = 0
     rejected: int = 0                 # backpressure / over-length rejections
+    preempted: int = 0                # in-flight requests evicted by drain
     occupancy_ticks: int = 0
     slot_served: List[int] = dataclasses.field(default_factory=list)
     wall_s: float = 0.0
@@ -173,22 +196,30 @@ class EngineStats:
         return self.ticks - self.idle_ticks
 
     def mean_occupancy(self) -> float:
-        """Mean fraction of slots active over the decode ticks (0..1]."""
-        busy = max(self.decode_ticks, 1)
-        return self.occupancy_ticks / (busy * self.n_slots)
+        """Mean fraction of slots active over the decode ticks (0..1];
+        0.0 for a zero-slot stats shell (router aggregates) — never a
+        ZeroDivisionError."""
+        denom = max(self.decode_ticks, 1) * self.n_slots
+        return self.occupancy_ticks / denom if denom else 0.0
 
     @staticmethod
     def _percentiles(samples: List[float]) -> dict:
-        if not samples:
-            return {"p50": None, "p95": None, "p99": None, "n": 0}
+        """p50/p95/p99 over the *finite* samples; a copy of
+        ``EMPTY_PERCENTILES`` when none survive (zero admitted requests, or
+        a clock hiccup injected NaN/inf) — the empty shape is explicit and
+        JSON-clean rather than NaN percentiles of an empty array."""
         arr = np.asarray(samples, dtype=np.float64)
+        arr = arr[np.isfinite(arr)]
+        if arr.size == 0:
+            return dict(EMPTY_PERCENTILES)
         p50, p95, p99 = np.percentile(arr, [50, 95, 99])
         return {"p50": round(float(p50), 6), "p95": round(float(p95), 6),
-                "p99": round(float(p99), 6), "n": len(samples)}
+                "p99": round(float(p99), 6), "n": int(arr.size)}
 
     def latency_report(self) -> dict:
         """p50/p95/p99 TTFT + TPOT (seconds) from the recorded samples;
-        percentile values are None when the engine ran unrecorded."""
+        the ``EMPTY_PERCENTILES`` shape (all None) when the engine ran
+        unrecorded or admitted nothing."""
         return {"ttft": self._percentiles(self.ttft_s),
                 "tpot": self._percentiles(self.tpot_s)}
 
@@ -211,6 +242,7 @@ class EngineStats:
             "evicted_eos": self.evicted_eos,
             "evicted_length": self.evicted_length,
             "rejected": self.rejected,
+            "preempted": self.preempted,
             "mean_occupancy": round(self.mean_occupancy(), 4),
             "slot_served": list(self.slot_served),
             "slot_reuse": max(self.slot_served, default=0),

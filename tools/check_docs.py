@@ -32,6 +32,7 @@ REPO = Path(__file__).resolve().parent.parent
 SEAM_MODULES = [
     "src/repro/serve/engine.py",
     "src/repro/serve/scheduler.py",
+    "src/repro/serve/router.py",
     "src/repro/serve/paging.py",
     "src/repro/core/kan.py",
     "src/repro/obs/recorder.py",
