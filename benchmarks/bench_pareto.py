@@ -1,0 +1,221 @@
+"""Per-layer operating-point autotuner -> results/BENCH_pareto.json.
+
+    python -m benchmarks.bench_pareto [--smoke] [--check]
+
+Reproduces the paper's co-design trade-off direction end to end: a CF-KAN
+is trained with QAT, Algorithm-2 sensitivities seed ``repro.tune``'s
+evolutionary search over the per-layer (G, LD, coeff_bits) lattice, and
+every candidate is scored by the DEPLOYED integer forward (validation
+Recall@20 through ``core.kan.deploy``/``apply`` — what is scored is
+exactly what serves) against the calibrated mixed-precision cost model.
+
+The record is an append-only ``history`` (like BENCH_serve/BENCH_chip);
+each entry carries the uniform-8-bit baseline, the Pareto frontier rows,
+and three proof fields:
+
+* ``sub8_dominates`` — some frontier point with a sub-8-bit layer beats
+  the baseline on BOTH area and power at <= 0.5% relative validation-
+  accuracy loss (the co-design claim);
+* ``acc_loss_frac`` — that point's relative accuracy loss;
+* ``requant_free`` — jaxpr-level pin that the deployed sub-8-bit forward
+  mints no extra requantization ops (``kan.trace_requantizes`` over the
+  winning artifact's apply — the same decode-tick contract BENCH_serve
+  pins for the 8-bit path).
+
+``--check`` additionally gates on those fields plus a monotone history
+and is the CI step; benchmarks/records_check.py re-validates the
+committed record's schema and the dominance arithmetic.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__),
+                            "../results/BENCH_pareto.json")
+SCHEMA = "bench_pareto/v1"
+ACC_LOSS_BUDGET = 0.005   # <= 0.5% relative validation-accuracy loss
+
+
+def _setup(smoke: bool, seed: int = 0):
+    """Train a small CF-KAN with QAT and return everything the search
+    needs: (spec, params, score_fn, quick_fn, sensitivities)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import kan, sensitivity
+    from repro.core.quant import ASPConfig
+    from repro.data import cf_synth
+    from repro.models import cf_kan
+
+    n_items, hidden = (96, 12) if smoke else (128, 16)
+    epochs = 4 if smoke else 8
+    cfg = cf_kan.CFKANConfig(n_items=n_items, hidden=hidden,
+                             asp_enc=ASPConfig(grid_size=8),
+                             asp_dec=ASPConfig(grid_size=8), name="pareto")
+    ds = cf_synth.generate(n_users=192 if smoke else 256, n_items=n_items,
+                           seed=seed)
+    train, val = cf_synth.split(ds)
+    params = cf_kan.init(jax.random.PRNGKey(seed), cfg)
+    loss = jax.jit(lambda p, x: cf_kan.multinomial_loss(p, x, cfg, qat=True))
+    lg = jax.jit(jax.value_and_grad(loss))
+    for e in range(epochs):
+        for xb in cf_synth.batches(train, 32, seed=e):
+            _, g = lg(params, jnp.asarray(xb))
+            params = jax.tree.map(lambda p, gg: p - 3e-2 * gg, params, g)
+
+    xv = jnp.asarray(val.observed)
+    hv = jnp.asarray(val.held_out)
+
+    def score(dep):
+        return float(cf_kan.recall_at_k(kan.apply(dep, xv), hv, xv, k=20))
+
+    def quick(dep):
+        return float(cf_kan.recall_at_k(kan.apply(dep, xv[:16]), hv[:16],
+                                        xv[:16], k=20))
+
+    batches = [(jnp.asarray(b),) for b in cf_synth.batches(val, 32)]
+    sens = sensitivity.layer_sensitivities(loss, params, batches,
+                                           ["enc/coeffs", "dec/coeffs"])
+    return cfg.kan_spec, params, score, quick, sens
+
+
+def _requant_pin(result, params, spec) -> bool:
+    """jaxpr pin: the winning sub-8-bit artifact's forward mints no int8
+    codes from floats (True = requant-free, the deploy-once contract)."""
+    import jax.numpy as jnp
+    from repro import tune
+    from repro.core import kan
+
+    winner = result.best_sub8()
+    if winner is None:
+        return False
+    new_spec = tune.assignment_spec(spec, winner.assignment)
+    dep = kan.deploy(tune.refit_params(params, spec, new_spec), new_spec)
+    x = jnp.zeros((2, spec.dims[0]), dtype=jnp.float32)
+    return not kan.trace_requantizes(lambda xx: kan.apply(dep, xx), x)
+
+
+def run(smoke: bool, budget: int, seed: int) -> dict:
+    """One full bench: train, search, and assemble the record entry."""
+    from repro import tune
+
+    spec, params, score, quick, sens = _setup(smoke, seed)
+    t0 = time.time()
+    result = tune.search(
+        params, spec, score, sens=sens, quick_fn=quick,
+        cfg=tune.TuneConfig(budget=budget, proposals_per_round=6, seed=seed))
+    search_s = time.time() - t0
+
+    base = result.baseline
+    rows = [c.as_dict() for c in result.frontier.points()]
+    dominating = [
+        c for c in result.frontier.points()
+        if c.sub8 and c.area_mm2 < base.area_mm2
+        and c.power_w < base.power_w
+        and c.accuracy >= base.accuracy * (1 - ACC_LOSS_BUDGET)]
+    winner = dominating[0] if dominating else None
+    return {
+        "smoke": smoke, "ok": True,
+        "budget": budget, "seed": seed, "search_s": search_s,
+        "n_bits": spec.asp[0].n_bits,
+        "kan_backend": spec.backend,
+        "dims": list(spec.dims),
+        "n_evals": len(result.evaluated),
+        "frontier_size": len(result.frontier),
+        "baseline": base.as_dict(),
+        "rows": rows,
+        "sub8_dominates": winner is not None,
+        "acc_loss_frac": (None if winner is None else
+                          max(0.0, 1.0 - winner.accuracy / base.accuracy)),
+        "requant_free": _requant_pin(result, params, spec),
+        "rounds": result.history,
+    }
+
+
+def check_entry(entry: dict) -> list:
+    """Co-design gate: violations of the frontier claims (empty = pass)."""
+    problems = []
+    rows = entry.get("rows") or []
+    if not any(r.get("sub8") for r in rows):
+        problems.append("no sub-8-bit point on the frontier")
+    if not entry.get("sub8_dominates"):
+        problems.append(
+            "no sub-8-bit frontier point dominates the uniform-8-bit "
+            f"baseline on area AND power within {ACC_LOSS_BUDGET:.1%} "
+            "accuracy loss")
+    if not entry.get("requant_free"):
+        problems.append("deployed sub-8-bit forward is not requant-free "
+                        "(jaxpr pin failed)")
+    return problems
+
+
+def load_record(path: str) -> dict:
+    """Append-only record loader (shared clobber protection)."""
+    from benchmarks._record import load_history_record
+    return load_history_record(path, SCHEMA)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small model + short search (CI smoke step)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the co-design claims (sub-8 frontier "
+                         "point, dominance, requant-free pin, monotone "
+                         "history)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="full candidate evaluations for the search")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    budget = args.budget or (10 if args.smoke else 24)
+    try:
+        entry = run(args.smoke, budget, args.seed)
+    except Exception as e:  # recorded, not silently missing
+        import traceback
+        traceback.print_exc(file=sys.stderr)
+        entry = {"smoke": args.smoke, "ok": False, "budget": budget,
+                 "seed": args.seed, "rows": [],
+                 "error": f"{type(e).__name__}: {e}"}
+
+    record = load_record(RESULTS_PATH)
+    prev_ts = [h.get("ts") for h in record["history"]]
+    entry.update({
+        "ts": time.time(),
+        "ts_iso": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+    })
+    record["history"].append(entry)
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(record, f, indent=1)
+    print(json.dumps({k: entry[k] for k in
+                      ("ok", "n_evals", "frontier_size", "sub8_dominates",
+                       "acc_loss_frac", "requant_free") if k in entry}))
+    print(f"wrote {os.path.normpath(RESULTS_PATH)} "
+          f"({len(record['history'])} history entries)", file=sys.stderr)
+    if not entry["ok"]:
+        raise SystemExit(1)
+    if args.check:
+        problems = check_entry(entry)
+        if any(a is not None and b is not None and b < a
+               for a, b in zip(prev_ts, prev_ts[1:])):
+            problems.append("record history not monotone before append")
+        if problems:
+            print("pareto co-design check FAILED:", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            raise SystemExit(1)
+        print("pareto co-design check OK", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

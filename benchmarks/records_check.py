@@ -25,6 +25,12 @@ Checks
   history, and for the latest entry: one row per (As, mapping) cell of the
   requested sweep (no silently-missing cells), every row ``ok`` with sane
   Monte-Carlo fields, and the Fig. 18 trend flag recorded.
+* ``results/BENCH_pareto.json`` — schema ``bench_pareto/v1``, append-only
+  history, and for the latest entry: a non-empty frontier with the required
+  row fields, at least one sub-8-bit frontier point, the recorded
+  ``sub8_dominates`` claim re-derived from the rows (some sub-8-bit point
+  beats the uniform-8-bit baseline on area AND power within the 0.5%
+  accuracy-loss budget), and the ``requant_free`` jaxpr pin true.
 * ``results/dryrun/*.json`` — the ``smoke`` flag must agree with the
   ``__smoke`` filename convention (report.py labels smoke records).
 * ``--trace FILE`` / ``--metrics FILE`` (optional) — validate an emitted
@@ -48,6 +54,13 @@ from typing import List
 KERNELS_SCHEMA = "bench_kernels/v1"
 SERVE_SCHEMA = "bench_serve/v1"
 CHIP_SCHEMA = "bench_chip/v1"
+PARETO_SCHEMA = "bench_pareto/v1"
+PARETO_ROW_KEYS = {"assignment", "accuracy", "area_mm2", "power_w",
+                   "latency_ns", "sub8"}
+PARETO_POINT_KEYS = {"G", "LD", "coeff_bits"}
+# acceptance budget mirrored from bench_pareto.ACC_LOSS_BUDGET: a sub-8-bit
+# point only counts as dominating within 0.5% relative accuracy loss
+PARETO_ACC_LOSS_BUDGET = 0.005
 EXPECTED_KERNEL_MODULES = {
     "benchmarks.bench_asp_haq", "benchmarks.bench_input_gen",
     "benchmarks.bench_kan_sam", "benchmarks.bench_scale",
@@ -341,6 +354,67 @@ def check_chip(path: str, problems: List[str]) -> None:
                             f"values for n_seeds={row['n_seeds']}")
 
 
+def check_pareto(path: str, problems: List[str]) -> None:
+    rec = _load(path, problems)
+    if rec is None:
+        return
+    entry = _check_history(rec, PARETO_SCHEMA, path, problems)
+    if entry is None:
+        return
+    if entry.get("ok") is not True:
+        problems.append(f"{path}: latest entry not ok: "
+                        f"{entry.get('error', 'no error recorded')}")
+        return
+    baseline = entry.get("baseline")
+    if not isinstance(baseline, dict):
+        problems.append(f"{path}: latest entry has no baseline row")
+        return
+    rows = entry.get("rows") or []
+    if not rows:
+        problems.append(f"{path}: latest entry has an empty frontier")
+        return
+    for i, row in enumerate(rows):
+        missing = PARETO_ROW_KEYS - set(row)
+        if missing:
+            problems.append(f"{path}: frontier row {i} missing keys "
+                            f"{sorted(missing)}")
+            continue
+        for pt in row["assignment"]:
+            if PARETO_POINT_KEYS - set(pt):
+                problems.append(f"{path}: frontier row {i} has a malformed "
+                                f"operating point {pt!r}")
+        for k in ("accuracy", "area_mm2", "power_w", "latency_ns"):
+            v = row[k]
+            if not (isinstance(v, (int, float)) and v >= 0):
+                problems.append(f"{path}: frontier row {i} has bad {k} "
+                                f"{v!r}")
+    sub8 = [r for r in rows if r.get("sub8")]
+    if not sub8:
+        problems.append(f"{path}: no sub-8-bit point on the latest frontier")
+    # re-derive the dominance claim from the committed rows so a hand-edited
+    # flag cannot ship without the arithmetic backing it
+    dominating = [
+        r for r in sub8
+        if isinstance(r.get("accuracy"), (int, float))
+        and r["area_mm2"] < baseline.get("area_mm2", 0)
+        and r["power_w"] < baseline.get("power_w", 0)
+        and r["accuracy"] >= baseline.get("accuracy", 1.0)
+        * (1 - PARETO_ACC_LOSS_BUDGET)]
+    if not dominating:
+        problems.append(
+            f"{path}: no sub-8-bit frontier row dominates the uniform-8-bit "
+            f"baseline on area AND power within "
+            f"{PARETO_ACC_LOSS_BUDGET:.1%} accuracy loss")
+    if entry.get("sub8_dominates") is not bool(dominating):
+        problems.append(f"{path}: sub8_dominates flag "
+                        f"{entry.get('sub8_dominates')!r} contradicts the "
+                        f"committed rows ({len(dominating)} dominating)")
+    if entry.get("requant_free") is not True:
+        problems.append(f"{path}: latest entry's requant_free pin is "
+                        f"{entry.get('requant_free')!r} (the deployed "
+                        "sub-8-bit decode tick must mint no requant ops)")
+
+
 def check_trace(path: str, problems: List[str]) -> None:
     """Validate a Chrome trace_event JSON emitted by ``--trace-out``."""
     rec = _load(path, problems)
@@ -455,6 +529,7 @@ def main(argv=None) -> None:
     check_kernels(os.path.join(root, "BENCH_kernels.json"), problems)
     check_serve(os.path.join(root, "BENCH_serve.json"), problems)
     check_chip(os.path.join(root, "BENCH_chip.json"), problems)
+    check_pareto(os.path.join(root, "BENCH_pareto.json"), problems)
     check_dryrun(os.path.join(root, "dryrun"), problems)
     if args.trace:
         check_trace(args.trace, problems)
@@ -470,7 +545,7 @@ def main(argv=None) -> None:
     extra = "".join(f", {p}" for p in (args.trace, args.metrics) if p)
     print(f"records-check OK: {root}/BENCH_kernels.json, "
           f"{root}/BENCH_serve.json, {root}/BENCH_chip.json, "
-          f"{root}/dryrun/*.json{extra}")
+          f"{root}/BENCH_pareto.json, {root}/dryrun/*.json{extra}")
 
 
 if __name__ == "__main__":

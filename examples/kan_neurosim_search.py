@@ -1,88 +1,83 @@
-"""KAN-NeuroSim hyperparameter optimization (paper §3.4, Fig. 11) end-to-end:
+"""Per-layer operating-point search for CF-KAN (paper §3.4 + Fig. 19):
 
     PYTHONPATH=src python examples/kan_neurosim_search.py
 
-Stage 1: hardware-budget screening picks the largest feasible G.
-Stage 2: grid-extension training — G grows by E while validation improves
-         AND the NeuroSim cost model stays within budget (else revert).
-Plus Algorithm 2: sensitivity-based per-layer grid assignment (CF-KAN-1's
-high-performance mode) with TD-P/TD-A mode selection per tier.
-"""
-import dataclasses
+Thin driver over ``repro.tune`` — the subsystem that now owns the whole
+co-design loop this example used to hand-roll:
 
+1. train a small CF-KAN with QAT;
+2. profile Algorithm-2 layer sensitivities (jitted gradient, cached);
+3. ``tune.search`` the per-layer (G, LD, coeff_bits) lattice, scoring each
+   candidate by the DEPLOYED forward's validation Recall@20 against the
+   calibrated mixed-precision cost model;
+4. print the uniform-8-bit baseline and the Pareto frontier.
+
+The CI-gated, record-emitting version of this loop is
+``benchmarks/bench_pareto.py``; docs/tuning.md walks through the output.
+"""
 import jax
 import jax.numpy as jnp
 
-from repro.core import grid_extension, sensitivity
+from repro import tune
+from repro.core import kan, sensitivity
 from repro.core.quant import ASPConfig
 from repro.data import cf_synth
-from repro.hw import cost_model, neurosim
 from repro.models import cf_kan
 
-N_ITEMS, HIDDEN = 256, 24
-ds = cf_synth.generate(n_users=512, n_items=N_ITEMS, seed=1)
+N_ITEMS, HIDDEN, EPOCHS = 128, 16, 6
+
+cfg = cf_kan.CFKANConfig(n_items=N_ITEMS, hidden=HIDDEN,
+                         asp_enc=ASPConfig(grid_size=8),
+                         asp_dec=ASPConfig(grid_size=8), name="tune-demo")
+ds = cf_synth.generate(n_users=256, n_items=N_ITEMS, seed=1)
 train, val = cf_synth.split(ds)
 
+params = cf_kan.init(jax.random.PRNGKey(0), cfg)
+loss = jax.jit(lambda p, x: cf_kan.multinomial_loss(p, x, cfg, qat=True))
+lg = jax.jit(jax.value_and_grad(loss))
+for e in range(EPOCHS):
+    for xb in cf_synth.batches(train, 32, seed=e):
+        _, g = lg(params, jnp.asarray(xb))
+        params = jax.tree.map(lambda p, gg: p - 3e-2 * gg, params, g)
 
-def make_cfg(asp):
-    return cf_kan.CFKANConfig(n_items=N_ITEMS, hidden=HIDDEN,
-                              asp_enc=asp, asp_dec=asp, name="ns-demo")
-
-
-def train_epochs(params, asp, n_epochs):
-    cfg = make_cfg(asp)
-    lg = jax.jit(jax.value_and_grad(
-        lambda p, x: cf_kan.multinomial_loss(p, x, cfg, qat=True)))
-    for e in range(n_epochs):
-        for xb in cf_synth.batches(train, 64, seed=e):
-            _, g = lg(params, jnp.asarray(xb))
-            params = jax.tree.map(lambda p, gg: p - 2e-2 * gg, params, g)
-    return params
+xv, hv = jnp.asarray(val.observed), jnp.asarray(val.held_out)
 
 
-def val_loss(params, asp):
-    cfg = make_cfg(asp)
-    return float(cf_kan.multinomial_loss(
-        params, jnp.asarray(val.observed), cfg, qat=True))
+def score(dep):
+    return float(cf_kan.recall_at_k(kan.apply(dep, xv), hv, xv, k=20))
 
 
-def extend(params, old, new):
-    return {k: grid_extension.extend_layer_params(v, old, new)
-            for k, v in params.items()}
+def quick(dep):
+    return float(cf_kan.recall_at_k(kan.apply(dep, xv[:16]), hv[:16],
+                                    xv[:16], k=20))
 
 
-budget = cost_model.HardwareBudget(max_area_mm2=5.0, max_power_w=0.02)
-asp0 = ASPConfig(grid_size=16)
-asp = neurosim.screen_constraints(
-    asp0, budget, count_params=lambda a: make_cfg(a).n_params,
-    n_channels=N_ITEMS + HIDDEN)
-print(f"Stage 1 screening: requested G={asp0.grid_size} -> "
-      f"feasible G={asp.grid_size}")
-asp = asp.with_grid(min(asp.grid_size, 4))  # start small, let extension grow
+# Algorithm 2 (jitted loss accepted; its gradient compiles once) seeds the
+# search: HIGH-sensitivity layers keep 8 bits, LOW layers drop G and bits.
+batches = [(jnp.asarray(b),) for b in cf_synth.batches(val, 32)]
+sens = sensitivity.layer_sensitivities(loss, params, batches,
+                                       ["enc/coeffs", "dec/coeffs"])
+print("Algorithm 2 sensitivities:",
+      {k: f"{v:.3e}" for k, v in sens.items()})
 
-params = cf_kan.init(jax.random.PRNGKey(0), make_cfg(asp))
-res = neurosim.grid_extension_training(
-    params, asp, train_epochs=train_epochs, val_loss=val_loss,
-    extend_coeffs=extend, count_params=lambda a: make_cfg(a).n_params,
-    budget=budget, n_channels=N_ITEMS + HIDDEN, extend_every=1, extend_by=2,
-    max_epochs=6, max_grid=16)
-print("Stage 2 grid-extension log:")
-for h in res.history:
-    print(f"  epoch {h.epoch}: G={h.grid_size} val={h.val_loss:.4f} "
-          f"area={h.cost.area_mm2:.3f}mm2 [{h.action}]")
-print(f"final G={res.asp.grid_size}")
+result = tune.search(params, cfg.kan_spec, score, sens=sens, quick_fn=quick,
+                     cfg=tune.TuneConfig(budget=16, seed=0))
 
-# Algorithm 2: per-layer sensitivity tiers (CF-KAN-1 mode)
-cfg = make_cfg(res.asp)
-batches = [(jnp.asarray(b),) for b in cf_synth.batches(val, 64)]
-sens = sensitivity.layer_sensitivities(
-    lambda p, x: cf_kan.multinomial_loss(p, x, cfg, qat=True),
-    res.params, batches, ["enc/coeffs", "dec/coeffs"])
-ga = sensitivity.assign_grids(sens, g_high=res.asp.grid_size,
-                              g_med=max(res.asp.grid_size // 2, 2),
-                              g_low=max(res.asp.grid_size // 4, 2))
-print("Algorithm 2 sensitivity tiers (HIGH->TD-A, LOW->TD-P):")
-for k in sens:
-    mode = "TD-A" if ga.classes[k] == "HIGH" else "TD-P"
-    print(f"  {k}: S={sens[k]:.3e} class={ga.classes[k]} "
-          f"G={ga.grids[k]} mode={mode}")
+b = result.baseline
+print(f"\nuniform 8-bit baseline: recall@20={b.accuracy:.4f} "
+      f"area={b.area_mm2:.4f}mm2 power={b.power_w:.3e}W")
+print(f"Pareto frontier ({len(result.frontier)} points, "
+      f"{len(result.evaluated)} evaluated):")
+for c in result.frontier.points():
+    pts = " ".join(f"(G={p.grid_size},LD={p.ld},b={p.coeff_bits})"
+                   for p in c.assignment)
+    tag = " [sub-8]" if c.sub8 else ""
+    print(f"  recall@20={c.accuracy:.4f} area={c.area_mm2:.4f}mm2 "
+          f"power={c.power_w:.3e}W  {pts}{tag}")
+best = result.best_sub8()
+if best is not None:
+    print(f"\nbest sub-8 point saves "
+          f"{100 * (1 - best.area_mm2 / b.area_mm2):.0f}% area / "
+          f"{100 * (1 - best.power_w / b.power_w):.0f}% power at "
+          f"{100 * max(0.0, 1 - best.accuracy / b.accuracy):.2f}% "
+          f"accuracy loss")

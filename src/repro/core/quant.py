@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,25 +40,48 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ASPConfig:
-    """Static configuration of one ASP-KAN-HAQ quantized spline family."""
+    """Static configuration of one ASP-KAN-HAQ quantized spline family.
+
+    ``(grid_size, ld_cap, coeff_bits)`` together form one *operating point*
+    of the accuracy/area/power trade-off (repro.tune searches that lattice
+    per layer): G sets spline expressiveness, LD the local input resolution
+    and SH-LUT depth, coeff_bits the number of programmed bit-slices.
+    """
     grid_size: int = 5        # G
     order: int = 3            # K
     n_bits: int = 8           # input quantization bit-width n
     x_min: float = -1.0
     x_max: float = 1.0
-    coeff_bits: int = 8       # ci' quantization (paper: 8-bit)
+    coeff_bits: int = 8       # ci' quantization (8 | 4 | 2 bit-slices)
+    # Operating-point cap on LD. None = the Eq. (6) jointly-optimal maximum;
+    # an explicit cap trades local input resolution (and SH-LUT rows, which
+    # scale as 2^LD) for area/energy while Eq. (4)/(5) stay satisfied.
+    ld_cap: Optional[int] = None
 
     def __post_init__(self):
         if self.grid_size > 2 ** self.n_bits:
             raise ValueError(
                 f"G={self.grid_size} exceeds 2^n={2**self.n_bits}: Eq. (4) "
                 f"unsatisfiable — no integer L with G*L <= 2^n.")
+        if self.ld_cap is not None and self.ld_cap < 0:
+            raise ValueError(f"ld_cap={self.ld_cap} < 0: LD is a bit count")
+        if not 2 <= self.coeff_bits <= 8:
+            raise ValueError(
+                f"coeff_bits={self.coeff_bits} outside [2, 8]: codes live in "
+                "int8 carriers (8-column bit-slice template, Alg. 1 Phase B).")
 
     # --- Eq. (6): jointly optimal power-of-two levels-per-interval ---
     @property
-    def ld(self) -> int:
-        """LD: log2 of quantization levels per knot interval."""
+    def ld_max(self) -> int:
+        """Eq. (6) maximum LD for (G, n): floor(log2(2^n / G))."""
         return int(np.floor(np.log2((2 ** self.n_bits) / self.grid_size)))
+
+    @property
+    def ld(self) -> int:
+        """LD: log2 of quantization levels per knot interval (capped)."""
+        if self.ld_cap is None:
+            return self.ld_max
+        return min(self.ld_cap, self.ld_max)
 
     @property
     def levels_per_interval(self) -> int:
@@ -211,12 +234,17 @@ def quantize_coeffs(c: Array, cfg: ASPConfig,
     against ``c``: shape [1, 1, O] under the per-output-channel convention).
     The paper stores ci' as 8-bit values bit-sliced across a fixed 8-column
     template (Alg. 1 Phase B); the int8 code here is exactly that digital
-    magnitude.
+    magnitude. Sub-8-bit operating points (``cfg.coeff_bits`` in {4, 2})
+    reuse the int8 carrier with a SYMMETRIC clip at ``2^(b-1)-1``: codes
+    stay within [-qmax, qmax] (the differential-pair magnitude the chip
+    sim bit-slices — the upper ``8-b`` slices are structurally zero), and
+    round-to-nearest keeps the round-trip error <= 0.5 LSB of the channel
+    scale for every b.
     """
     qmax = 2 ** (cfg.coeff_bits - 1) - 1
     amax = jnp.max(jnp.abs(c), axis=axis, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / qmax
-    codes = jnp.clip(jnp.round(c / scale), -qmax - 1, qmax).astype(jnp.int8)
+    codes = jnp.clip(jnp.round(c / scale), -qmax, qmax).astype(jnp.int8)
     return codes, scale
 
 
@@ -274,9 +302,10 @@ def conventional_quantized_basis(x: Array, cfg: ASPConfig) -> Array:
 
 @functools.lru_cache(maxsize=64)
 def cached_hemi_np(grid_size: int, order: int, n_bits: int,
-                   x_min: float, x_max: float) -> np.ndarray:
+                   x_min: float, x_max: float,
+                   ld: Optional[int] = None) -> np.ndarray:
     cfg = ASPConfig(grid_size=grid_size, order=order, n_bits=n_bits,
-                    x_min=x_min, x_max=x_max)
+                    x_min=x_min, x_max=x_max, ld_cap=ld)
     L = cfg.levels_per_interval
     u = (np.arange(L, dtype=np.float64) + 0.5) / L
     full = _cardinal_taps_np(u, cfg.order).astype(np.float32)
@@ -284,7 +313,8 @@ def cached_hemi_np(grid_size: int, order: int, n_bits: int,
 
 
 def hemi_for(cfg: ASPConfig, dtype=jnp.float32) -> Array:
-    """Cached SH-LUT for a config (one table per (G,K,n) family, as on chip)."""
+    """Cached SH-LUT for a config (one table per (G,K,n,LD) family, as on
+    chip — an ``ld_cap`` below the Eq. (6) maximum shrinks the table)."""
     return jnp.asarray(
         cached_hemi_np(cfg.grid_size, cfg.order, cfg.n_bits, cfg.x_min,
-                       cfg.x_max), dtype=dtype)
+                       cfg.x_max, cfg.ld), dtype=dtype)

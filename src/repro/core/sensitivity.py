@@ -12,6 +12,7 @@ LOW) and grid-template assignment G_high / G_med / G_low.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, List, Sequence
 
 import jax
@@ -28,12 +29,27 @@ class GridAssignment:
     grids: Dict[str, int]            # layer -> assigned G
 
 
+@functools.lru_cache(maxsize=32)
+def _cached_grad(loss_fn: Callable) -> Callable:
+    """jit-compiled gradient of ``loss_fn``, cached by function identity so
+    every batch of every profiling call site reuses ONE compiled executable
+    (previously each call rebuilt an un-jitted ``jax.grad`` and retraced per
+    batch). ``jax.grad`` composes with already-jit-compiled loss functions,
+    so callers may pass either form."""
+    return jax.jit(jax.grad(loss_fn))
+
+
 def layer_sensitivities(loss_fn: Callable, params, val_batches,
                         coeff_paths: Sequence[str]) -> Dict[str, float]:
     """Phase 1. ``coeff_paths`` are '/'-joined pytree paths selecting each
     layer's spline-coefficient leaves; sensitivity is averaged over
-    ``val_batches`` (iterable of loss_fn batch args)."""
-    grad_fn = jax.grad(loss_fn)
+    ``val_batches`` (iterable of loss_fn batch args). ``loss_fn`` may be a
+    plain or jit-compiled callable; its (jitted) gradient is cached across
+    batches AND across repeated calls with the same function object."""
+    try:
+        grad_fn = _cached_grad(loss_fn)
+    except TypeError:  # unhashable callable: still jit, skip the cache
+        grad_fn = jax.jit(jax.grad(loss_fn))
     acc = {p: 0.0 for p in coeff_paths}
     n = 0
     for batch in val_batches:

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict
+from typing import Dict, Sequence, Tuple
 
 from repro.core.quant import ASPConfig
 
@@ -166,3 +166,69 @@ def kan_model_cost(n_params: int, cfg: ASPConfig, n_channels: int,
 
 
 TD_DEFAULT_N = 3  # TD-A is the calibration reference mode
+
+
+# ---------------------------------------------------------------------------
+# 4. Mixed per-layer operating-point cost (repro.tune)
+# ---------------------------------------------------------------------------
+# The Fig. 19 scale model is calibrated at 8-bit params (1 param = 8
+# programmed bit-slice columns). A sub-8-bit layer programs proportionally
+# fewer columns, so the crossbar share of a mixed-precision model is the
+# scale model evaluated at the BIT-WEIGHTED effective cell count. The B(X)
+# retrieval share is per input channel and depends on (G, LD, coeff_bits)
+# through the PowerGap structure counts: the SH-LUT is 2^(LD-1) rows deep
+# and coeff_bits wide.
+_BX_BITCELL_MM2 = 0.09e-6 * 2   # 22nm SRAM bitcell + periphery (as in
+#                                  kan_model_cost's B(X) area conversion)
+_BX_POWER_SHARE = 0.15          # B(X) retrieval share of accelerator power
+#                                  at the 8-bit / max-LD reference point
+
+
+def operating_point_bx_units(cfg: ASPConfig) -> Tuple[float, float]:
+    """(area units, read-energy units) of ONE channel's B(X) path at an
+    operating point: SH-LUT bits plus the PowerGap TG-MUX/decoder
+    structures. Both shrink with the LD cap (table depth) and with
+    ``coeff_bits`` (table width) — the knobs ``repro.tune`` searches."""
+    s = powergap_structure(cfg)
+    area = s["sh_lut_bits"] + 0.5 * (s["tg_after"] + s["decoder_units_after"])
+    energy = s["sh_lut_bits"] ** _LUT_READ_ENERGY_EXP
+    return area, energy
+
+
+def mixed_kan_cost(layers: Sequence[Tuple[int, int, ASPConfig]]
+                   ) -> AcceleratorCost:
+    """Whole-model cost of a per-layer mixed (G, LD, coeff_bits) assignment.
+
+    ``layers``: one ``(n_params, n_channels, asp)`` triple per KAN layer
+    (``n_params`` counted at that layer's native precision, ``n_channels``
+    the input channels feeding its B(X) units). Crossbar area/power/latency
+    come from the Fig. 19 scale model at ``sum(n_params * coeff_bits/8)``
+    effective cells; B(X) area is added per channel, and B(X) read energy
+    rescales the calibrated retrieval share of power relative to the same
+    layers at the 8-bit / max-LD reference. Every term is monotone in each
+    knob, so a sub-8-bit point can only improve area and power — accuracy
+    is the tension the Pareto search resolves.
+    """
+    p_total = 0
+    p_eff = 0.0
+    bx_area = 0.0
+    bx_energy = 0.0
+    bx_energy_ref = 0.0
+    for n_params, n_channels, asp in layers:
+        p_total += n_params
+        p_eff += n_params * asp.coeff_bits / 8.0
+        a_u, e_u = operating_point_bx_units(asp)
+        ref = dataclasses.replace(asp, coeff_bits=8, ld_cap=None)
+        _, e_ref = operating_point_bx_units(ref)
+        bx_area += a_u * n_channels * _BX_BITCELL_MM2
+        bx_energy += e_u * n_channels
+        bx_energy_ref += e_ref * n_channels
+    base = accelerator_cost(max(int(round(p_eff)), 1))
+    power = base.power_w * (1.0 - _BX_POWER_SHARE + _BX_POWER_SHARE
+                            * bx_energy / max(bx_energy_ref, 1e-12))
+    return AcceleratorCost(
+        params=p_total,
+        area_mm2=base.area_mm2 + bx_area,
+        power_w=power,
+        latency_ns=base.latency_ns,
+    )

@@ -109,6 +109,52 @@ def test_coeff_quant_axis_tuple_per_output_channel():
     assert bool((err_row <= 0.5 * scale_row + 1e-7).all())
 
 
+@pytest.mark.parametrize("bits", [4, 2])
+def test_coeff_quant_sub8_symmetric(bits):
+    """Sub-8-bit operating points: int8 carrier, symmetric clip at
+    2^(b-1)-1, per-output-channel scale shape preserved, round-trip error
+    still <= 0.5 LSB of the channel scale, upper bit-slices structurally
+    zero (so the crossbar programs only b columns)."""
+    key = jax.random.PRNGKey(7)
+    cfg = ASPConfig(coeff_bits=bits)
+    qmax = 2 ** (bits - 1) - 1
+    c = jax.random.normal(key, (6, cfg.n_basis, 5))
+    codes, scale = quant.quantize_coeffs(c, cfg, axis=(0, 1))
+    assert codes.dtype == jnp.int8                    # same carrier as 8-bit
+    assert scale.shape == (1, 1, 5)                   # per-output-channel
+    mags = jnp.abs(codes.astype(jnp.int32))
+    assert int(jnp.max(mags)) <= qmax                 # symmetric: no -2^(b-1)
+    np.testing.assert_array_equal(jnp.max(mags, axis=(0, 1)),
+                                  np.full(5, qmax))   # channels saturate
+    sl = quant.bit_slices(codes)
+    np.testing.assert_array_equal(np.asarray(sl[..., :8 - bits]), 0)
+    err = jnp.abs(quant.dequantize_coeffs(codes, scale) - c)
+    assert bool((err <= 0.5 * scale + 1e-7).all())
+
+
+def test_ld_cap_shrinks_sh_lut_and_keeps_alignment():
+    """An ld_cap below the Eq. (6) maximum shrinks the SH-LUT and input
+    resolution but the Alignment/PowerGap invariants (and the zero-offset
+    knot decode) must still hold."""
+    base = ASPConfig(grid_size=8)                     # Eq. 6: LD = 5
+    capped = ASPConfig(grid_size=8, ld_cap=3)
+    assert (base.ld, capped.ld) == (5, 3)
+    assert ASPConfig(grid_size=8, ld_cap=99).ld == 5  # cap clamps to Eq. 6
+    assert capped.levels_per_interval == 8
+    assert capped.n_levels == 64                      # Eq. 4 still satisfied
+    hemi = quant.hemi_for(capped)
+    assert hemi.shape == (4, capped.n_taps)           # 2^(LD-1) rows, not 16
+    for s in range(capped.grid_size):                 # knots stay aligned
+        knot_x = capped.x_min + s * (capped.x_max - capped.x_min) \
+            / capped.grid_size
+        q = quant.quantize_input(jnp.asarray(knot_x + 1e-6), capped)
+        seg, loc = quant.powergap_decode(q, capped)
+        assert int(loc) == 0 and int(seg) == s
+    qb = quant.quantized_basis(jnp.linspace(-0.999, 0.999, 129),
+                               hemi, capped)
+    np.testing.assert_allclose(qb.sum(-1), 1.0, atol=1e-5)
+
+
 def test_bit_slices():
     codes = jnp.asarray([-127, -1, 0, 1, 85, 127], dtype=jnp.int8)
     sl = quant.bit_slices(codes)

@@ -1,0 +1,265 @@
+"""repro.tune invariants: lattice feasibility, Pareto dominance laws,
+frontier survival, deterministic search, and the sub-8-bit deploy pins."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.core import kan, sensitivity
+from repro.core.quant import ASPConfig
+from repro.tune import pareto, space
+
+
+def _cand(objs, assignment=None):
+    """Candidate from a uniformly-minimized objective 4-vector."""
+    acc, area, power, lat = objs
+    if assignment is None:
+        assignment = (space.OperatingPoint(8, 4, 8),)
+    return pareto.Candidate(assignment, -acc, area, power, lat)
+
+
+def _random_vecs(rng, n):
+    """Random objective vectors on a small integer grid so dominance
+    relations (including exact ties) actually occur in the sample."""
+    return [tuple(float(v) for v in rng.integers(0, 4, size=4))
+            for _ in range(n)]
+
+
+# --- operating-point lattice (Eq. 4/5) -------------------------------------
+
+def test_lattice_points_all_feasible():
+    """Every emitted lattice point satisfies Alignment + PowerGap."""
+    base = ASPConfig(grid_size=8)
+    lat = space.lattice(base)
+    assert lat, "lattice must be non-empty"
+    assert len(set(lat)) == len(lat)
+    for pt in lat:
+        assert space.is_feasible(pt, n_bits=base.n_bits)
+        assert pt.grid_size * (1 << pt.ld) <= 2 ** base.n_bits   # Eq. 4
+        assert pt.ld >= 1                                        # Eq. 5
+        assert pt.coeff_bits in space.COEFF_BITS
+    # deterministic enumeration
+    assert lat == space.lattice(base)
+
+
+def test_lattice_infeasible_combinations_filtered():
+    """G=64 at n=8 leaves only LD in {1, 2}; G=256 leaves nothing (LD=0)."""
+    base = ASPConfig(grid_size=8)
+    lds = {pt.ld for pt in space.lattice(base, grids=(64,))}
+    assert lds == {1, 2}
+    assert space.lattice(base, grids=(256,)) == ()
+
+
+def test_apply_point_roundtrip():
+    asp = ASPConfig(grid_size=8)
+    pt = space.OperatingPoint(16, 2, 4)
+    asp2 = space.apply_point(asp, pt)
+    assert (asp2.grid_size, asp2.ld, asp2.coeff_bits) == (16, 2, 4)
+    assert space.point_of(asp2) == pt
+
+
+def test_sub8_assignment_costs_less():
+    """Dropping one layer to 4-bit coefficients must strictly shrink area
+    AND power in the mixed cost model (else the search could never emit a
+    dominating sub-8 point)."""
+    asp = ASPConfig(grid_size=8)
+    spec = kan.KANSpec(dims=(8, 6, 8), asp=(asp, asp),
+                       layer_names=("enc", "dec"))
+    base = space.assignment_cost(spec)
+    pts = (space.OperatingPoint(8, asp.ld, 4),
+           space.OperatingPoint(8, asp.ld, 8))
+    mixed = space.assignment_cost(space.assignment_spec(spec, pts))
+    assert mixed.area_mm2 < base.area_mm2
+    assert mixed.power_w < base.power_w
+
+
+# --- Pareto dominance laws -------------------------------------------------
+
+def test_dominance_irreflexive():
+    rng = np.random.default_rng(0)
+    for v in _random_vecs(rng, 200):
+        assert not pareto.dominates(_cand(v), _cand(v))
+
+
+def test_dominance_antisymmetric():
+    rng = np.random.default_rng(1)
+    for u, v in zip(_random_vecs(rng, 200), _random_vecs(rng, 200)):
+        a, b = _cand(u), _cand(v)
+        assert not (pareto.dominates(a, b) and pareto.dominates(b, a))
+
+
+def test_dominance_transitive():
+    rng = np.random.default_rng(2)
+    triggered = 0
+    for _ in range(2000):
+        a, b, c = (_cand(tuple(float(v) for v in rng.integers(0, 3, size=4)))
+                   for _ in range(3))
+        if pareto.dominates(a, b) and pareto.dominates(b, c):
+            triggered += 1
+            assert pareto.dominates(a, c)
+    assert triggered > 10   # the sample actually exercised the implication
+
+
+def test_frontier_is_mutually_non_dominated():
+    """After any insertion sequence, no frontier point dominates another
+    and every evaluated candidate is either on the frontier or weakly
+    dominated by an incumbent (nothing non-dominated gets dropped)."""
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        cands = [_cand(v) for v in
+                 _random_vecs(rng, int(rng.integers(1, 20)))]
+        f = pareto.ParetoFrontier()
+        for c in cands:
+            f.add(c)
+        pts = f.points()
+        assert pts, "non-empty input must leave a non-empty frontier"
+        for p in pts:
+            for q in pts:
+                assert not pareto.dominates(p, q)
+        for c in cands:
+            assert c.objectives() in {p.objectives() for p in pts} or \
+                any(pareto._weakly_dominates(p, c) for p in pts)
+
+
+def test_dominated_candidate_never_survives():
+    """A deliberately-dominated candidate is rejected on insert and evicted
+    when a dominating candidate arrives later."""
+    good = _cand((1.0, 1.0, 1.0, 1.0))      # better on every objective
+    worse = _cand((2.0, 2.0, 2.0, 2.0))
+    f = pareto.ParetoFrontier()
+    assert f.add(good)
+    assert not f.add(worse)              # rejected: weakly dominated
+    assert worse not in f.points()
+    f2 = pareto.ParetoFrontier()
+    assert f2.add(worse)
+    assert f2.add(good)                  # arrives later -> evicts worse
+    assert f2.points() == (good,)
+
+
+def test_candidate_sub8_flag_and_row():
+    c = pareto.Candidate((space.OperatingPoint(8, 4, 8),
+                          space.OperatingPoint(4, 3, 2)),
+                         0.5, 1.0, 2.0, 3.0, meta={"origin": "t"})
+    assert c.sub8
+    row = c.as_dict()
+    assert row["assignment"][1] == {"G": 4, "LD": 3, "coeff_bits": 2}
+    assert row["sub8"] and row["origin"] == "t"
+
+
+# --- the search itself -----------------------------------------------------
+
+def _tiny():
+    """2-layer named KAN + a deterministic fidelity score (negative MSE of
+    the deployed forward against the float reference)."""
+    asp = ASPConfig(grid_size=8)
+    spec = kan.KANSpec(dims=(8, 6, 8), asp=(asp, asp), backend="lut",
+                       layer_names=("enc", "dec"))
+    params = kan.init(jax.random.PRNGKey(0), spec)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (16, 8),
+                           minval=-1.0, maxval=1.0)
+    ref = kan.train_apply(params, x, spec)
+
+    def score(dep):
+        return -float(jnp.mean((kan.apply(dep, x) - ref) ** 2))
+
+    return spec, params, x, score
+
+
+def test_search_deterministic_and_emits_feasible_points():
+    spec, params, x, score = _tiny()
+    cfg = tune.TuneConfig(budget=6, proposals_per_round=4, seed=0)
+    r1 = tune.search(params, spec, score, cfg=cfg)
+    r2 = tune.search(params, spec, score, cfg=cfg)
+    key = lambda r: [(c.assignment, c.accuracy, c.area_mm2, c.power_w)
+                     for c in r.frontier.points()]
+    assert key(r1) == key(r2)            # fixed seed => identical frontier
+    assert [c.assignment for c in r1.evaluated] == \
+           [c.assignment for c in r2.evaluated]
+    lat = set(space.lattice(spec.asp[0]))
+    for c in r1.evaluated:               # every emitted point is Eq. 4/5
+        assert len(c.assignment) == spec.n_layers
+        for pt in c.assignment:
+            assert pt in lat
+            assert space.is_feasible(pt, n_bits=spec.asp[0].n_bits)
+    assert r1.baseline.meta["origin"] == "baseline"
+    assert not r1.baseline.sub8
+    assert len(r1.evaluated) <= cfg.budget
+
+
+def test_search_frontier_holds_no_dominated_candidate():
+    spec, params, x, score = _tiny()
+    r = tune.search(params, spec, score,
+                    cfg=tune.TuneConfig(budget=6, seed=1))
+    pts = r.frontier.points()
+    for c in r.evaluated:                # anything off-frontier is dominated
+        if c not in pts:
+            assert any(pareto._weakly_dominates(p, c) for p in pts)
+
+
+def test_seed_assignment_follows_sensitivity_tiers():
+    """HIGH-sensitivity layer keeps 8 bits, LOW drops grid AND bits."""
+    asp = ASPConfig(grid_size=8)
+    spec = kan.KANSpec(dims=(8, 6, 8), asp=(asp, asp),
+                       layer_names=("enc", "dec"))
+    lat = space.lattice(asp)
+    seed = tune.seed_assignment(spec, {"enc/coeffs": 10.0,
+                                       "dec/coeffs": 0.1}, lat)
+    assert seed[0].coeff_bits == 8 and seed[0].grid_size == 8
+    assert seed[1].coeff_bits < 8 and seed[1].grid_size <= 4
+    for pt in seed:
+        assert pt in lat
+
+
+def test_refit_params_changes_grid_shapes():
+    spec, params, x, _ = _tiny()
+    pts = (space.OperatingPoint(4, 5, 8), space.OperatingPoint(8, 4, 4))
+    new_spec = tune.assignment_spec(spec, pts)
+    refit = tune.refit_params(params, spec, new_spec)
+    assert refit["enc"]["coeffs"].shape[1] == new_spec.asp[0].n_basis
+    assert refit["dec"]["coeffs"].shape == params["dec"]["coeffs"].shape
+    # the refit tree deploys under the new spec
+    dep = kan.deploy(refit, new_spec)
+    assert kan.apply(dep, x).shape == (16, 8)
+
+
+def test_sub8_deployed_forward_requant_free():
+    """jaxpr pin: a mixed sub-8-bit artifact's forward mints no int8 codes
+    from floats (same deploy-once contract as the uniform-8-bit path)."""
+    spec, params, x, _ = _tiny()
+    pts = (space.OperatingPoint(8, 4, 4), space.OperatingPoint(4, 5, 2))
+    new_spec = tune.assignment_spec(spec, pts)
+    dep = kan.deploy(tune.refit_params(params, spec, new_spec), new_spec)
+    assert not kan.trace_requantizes(lambda xx: kan.apply(dep, xx), x)
+
+
+# --- sensitivity profiling (jit + grad caching) ----------------------------
+
+def test_layer_sensitivities_accepts_jitted_loss_and_caches_grad():
+    """A jit-compiled loss is profiled without error, its gradient traces
+    at most once across batches, and a second profiling call with the SAME
+    function object re-traces nothing (the lru-cached jitted grad)."""
+    traces = {"n": 0}
+    asp = ASPConfig(grid_size=4)
+    spec = kan.KANSpec(dims=(4, 3, 4), asp=(asp, asp), backend="ref",
+                       layer_names=("enc", "dec"))
+    params = kan.init(jax.random.PRNGKey(0), spec)
+
+    def loss(p, xb):
+        traces["n"] += 1                 # python side effect: counts traces
+        return jnp.mean(kan.train_apply(p, xb, spec, qat=True) ** 2)
+
+    jitted = jax.jit(loss)
+    batches = [(jax.random.uniform(jax.random.PRNGKey(i), (4, 4),
+                                   minval=-1.0, maxval=1.0),)
+               for i in range(3)]
+    paths = ["enc/coeffs", "dec/coeffs"]
+    s1 = sensitivity.layer_sensitivities(jitted, params, batches, paths)
+    n_first = traces["n"]
+    assert 1 <= n_first <= 2             # one grad trace, not one per batch
+    s2 = sensitivity.layer_sensitivities(jitted, params, batches, paths)
+    assert traces["n"] == n_first        # cached across profiling calls
+    assert set(s1) == set(paths)
+    for p in paths:
+        assert s1[p] == pytest.approx(s2[p])
+        assert s1[p] > 0

@@ -36,6 +36,9 @@ SEAM_MODULES = [
     "src/repro/serve/paging.py",
     "src/repro/core/kan.py",
     "src/repro/obs/recorder.py",
+    "src/repro/tune/space.py",
+    "src/repro/tune/pareto.py",
+    "src/repro/tune/search.py",
 ]
 
 # [text](target) — markdown inline links; images share the syntax.
