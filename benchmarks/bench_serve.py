@@ -102,6 +102,21 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
     eng2.run(list(reqs))
     rep = eng2.stats.report()
     lat = rep["ttft_s"], rep["tpot_s"]
+    sketch = rep["ttft_sketch"], rep["tpot_sketch"]
+    # score the timed run against the default serving SLOs: every latency
+    # sample plus each completion as an error-free event, closed into one
+    # tick window — the verdict column fresh BENCH rows carry
+    from repro.obs import SLOMonitor
+    mon = SLOMonitor()
+    for v in eng2.stats.ttft_s:
+        mon.observe("ttft", v)
+    for v in eng2.stats.tpot_s:
+        mon.observe("tpot", v)
+    for _ in range(rep["completed"]):
+        mon.observe_event("errors", True)
+    mon.observe("queue_wait", 0.0)
+    mon.tick()
+    slo_verdicts = mon.verdicts()
     row = {
         "arch": label or arch_id, "family": m.family, "smoke": smoke,
         "ok": True, "replicas": 1,
@@ -126,6 +141,21 @@ def bench_arch(arch_id: str, *, smoke: bool, slots: int, requests: int,
         "ttft_p99_s": lat[0]["p99"],
         "tpot_p50_s": lat[1]["p50"], "tpot_p95_s": lat[1]["p95"],
         "tpot_p99_s": lat[1]["p99"],
+        # mergeable-sketch twins of the numpy percentiles (same samples
+        # through obs.sketch.QuantileSketch — alpha-bounded relative
+        # error, fleet-mergeable across replicas)
+        "ttft_sketch_p50_s": sketch[0]["p50"],
+        "ttft_sketch_p95_s": sketch[0]["p95"],
+        "ttft_sketch_p99_s": sketch[0]["p99"],
+        "tpot_sketch_p50_s": sketch[1]["p50"],
+        "tpot_sketch_p95_s": sketch[1]["p95"],
+        "tpot_sketch_p99_s": sketch[1]["p99"],
+        "sketch_alpha": sketch[0]["alpha"],
+        # SLO verdicts over the timed run's samples (obs.slo defaults) and
+        # the health-drain count (single engine: structurally zero) — the
+        # fleet-health columns records_check gates on fresh rows
+        "slo_verdicts": slo_verdicts,
+        "drained_for_health": 0,
         # compile cost the warm-up run paid (one prefill per distinct
         # prompt length + the fused tick + the cache write)
         "prefill_compiles": sum(
@@ -229,6 +259,7 @@ def bench_scaling(arch_id: str, *, smoke: bool, slots: int, requests: int,
             "busy_s": rep["busy_s"], "busy_s_max": rep["busy_s_max"],
             "router_s": rep["router_s"],
             "agg_tokens_per_s": rep["agg_tokens_per_s"],
+            "drained_for_health": rep["drained_for_health"],
         }
         base = rows[0] if rows else row
         row["scaling_efficiency"] = round(

@@ -16,7 +16,12 @@ Checks
   flags consistent with the entry-level flag, the KAN-FFN arch present,
   its row proving the deploy-once contract (``kan_deployed`` +
   ``requant_free``), at least one row proving prefix-page reuse
-  (``prefix_hit_rate > 0`` — the bench trace shares a prompt prefix), and
+  (``prefix_hit_rate > 0`` — the bench trace shares a prompt prefix), the
+  fleet-health columns on fresh rows (mergeable-sketch percentile twins —
+  positive + monotone, with a sane ``sketch_alpha``; ``slo_verdicts`` as a
+  non-empty dict of ok/burning/no_data; ``drained_for_health`` a
+  non-negative int — the sketch accuracy *bound* itself is pinned by the
+  property tests in tests/test_sketch_slo.py), and
   the multi-replica router weak-scaling rows (one per replica count in
   ``replica_scaling``): zero lost requests each, with the max-replica row
   holding ``scaling_efficiency >= 0.8`` (0.8x linear modeled scaling —
@@ -80,15 +85,26 @@ SERVE_ROW_KEYS = {"arch", "family", "smoke", "ok", "replicas", "n_slots",
                   # paged KV pool columns: fresh rows must record the page
                   # geometry and prefix-cache effectiveness
                   "page_size", "n_pages", "pages_in_use_peak",
-                  "prefill_chunks", "prefix_hit_rate"}
+                  "prefill_chunks", "prefix_hit_rate",
+                  # fleet-health columns: mergeable-sketch percentile twins
+                  # (obs.sketch), SLO verdicts (obs.slo), and the router
+                  # health-drain count (0 on single-engine rows)
+                  "ttft_sketch_p50_s", "ttft_sketch_p95_s",
+                  "ttft_sketch_p99_s", "tpot_sketch_p50_s",
+                  "tpot_sketch_p95_s", "tpot_sketch_p99_s",
+                  "sketch_alpha", "slo_verdicts", "drained_for_health"}
 SERVE_LATENCY_KEYS = ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",
                       "tpot_p50_s", "tpot_p95_s", "tpot_p99_s")
+SERVE_SKETCH_KEYS = ("ttft_sketch_p50_s", "ttft_sketch_p95_s",
+                     "ttft_sketch_p99_s", "tpot_sketch_p50_s",
+                     "tpot_sketch_p95_s", "tpot_sketch_p99_s")
+SLO_VERDICT_VALUES = {"ok", "burning", "no_data"}
 # multi-replica router weak-scaling rows (bench_serve appends one per
 # replica count): identified by the modeled-concurrency aggregate column
 SCALING_ROW_KEYS = {"arch", "family", "smoke", "ok", "replicas", "n_slots",
                     "requests", "completed", "tokens", "routed", "busy_s",
                     "busy_s_max", "router_s", "agg_tokens_per_s",
-                    "scaling_efficiency"}
+                    "scaling_efficiency", "drained_for_health"}
 # CI gate: the max-replica scaling row must stay within 0.8x of linear —
 # a router or placement regression shows up here before it ships
 SCALING_EFFICIENCY_FLOOR = 0.8
@@ -222,6 +238,11 @@ def _check_scaling_rows(entry, rows, path: str, problems: List[str]) -> None:
         if not (isinstance(agg, (int, float)) and agg > 0):
             problems.append(f"{path}: scaling row {arch!r} has bad "
                             f"agg_tokens_per_s {agg!r}")
+        if not (isinstance(row["drained_for_health"], int)
+                and row["drained_for_health"] >= 0):
+            problems.append(f"{path}: scaling row {arch!r} has bad "
+                            f"drained_for_health "
+                            f"{row['drained_for_health']!r}")
         eff = row["scaling_efficiency"]
         if not (isinstance(eff, (int, float)) and eff > 0):
             problems.append(f"{path}: scaling row {arch!r} has bad "
@@ -296,6 +317,38 @@ def check_serve(path: str, problems: List[str]) -> None:
                     problems.append(f"{path}: row {arch!r} {fam} "
                                     f"percentiles not monotone: "
                                     f"{p50} / {p95} / {p99}")
+        for k in SERVE_SKETCH_KEYS:
+            v = row[k]
+            if not (isinstance(v, (int, float)) and v > 0):
+                problems.append(f"{path}: row {arch!r} has bad sketch "
+                                f"percentile {k} {v!r} (did report() lose "
+                                "the sketch twins?)")
+        if all(isinstance(row[k], (int, float)) for k in SERVE_SKETCH_KEYS):
+            for fam in ("ttft", "tpot"):
+                p50, p95, p99 = (row[f"{fam}_sketch_p50_s"],
+                                 row[f"{fam}_sketch_p95_s"],
+                                 row[f"{fam}_sketch_p99_s"])
+                if not (p50 <= p95 <= p99):
+                    problems.append(f"{path}: row {arch!r} {fam} sketch "
+                                    f"percentiles not monotone: "
+                                    f"{p50} / {p95} / {p99}")
+        alpha = row["sketch_alpha"]
+        if not (isinstance(alpha, (int, float)) and 0 < alpha < 1):
+            problems.append(f"{path}: row {arch!r} has bad sketch_alpha "
+                            f"{alpha!r}")
+        verdicts = row["slo_verdicts"]
+        if (not isinstance(verdicts, dict) or not verdicts
+                or any(v not in SLO_VERDICT_VALUES
+                       for v in verdicts.values())):
+            problems.append(f"{path}: row {arch!r} has malformed "
+                            f"slo_verdicts {verdicts!r} (want a non-empty "
+                            f"dict with values in "
+                            f"{sorted(SLO_VERDICT_VALUES)})")
+        if not (isinstance(row["drained_for_health"], int)
+                and row["drained_for_health"] >= 0):
+            problems.append(f"{path}: row {arch!r} has bad "
+                            f"drained_for_health "
+                            f"{row['drained_for_health']!r}")
         if not (isinstance(row["prefill_compiles"], int)
                 and row["prefill_compiles"] >= 1):
             problems.append(f"{path}: row {arch!r} records no prefill "
@@ -476,14 +529,22 @@ def check_obs_metrics(path: str, problems: List[str]) -> None:
         problems.append(f"{path}: empty or missing metrics")
         return
     for name in ("serve_ttft_seconds", "serve_tpot_seconds"):
-        h = metrics.get(name)
-        if h is None:
+        # a fleet snapshot carries one labeled series per replica
+        # (serve_ttft_seconds{replica="0"} ...) alongside — or instead
+        # of — the unlabeled single-engine series; any non-empty series
+        # of the family satisfies the gate
+        series = [v for k, v in metrics.items()
+                  if (k == name or k.startswith(name + "{"))
+                  and v.get("kind") == "histogram"]
+        if not series:
             problems.append(f"{path}: missing histogram {name!r}")
             continue
-        if h.get("kind") != "histogram" or not h.get("count"):
-            problems.append(f"{path}: {name!r} is not a non-empty "
-                            f"histogram: {h.get('kind')}/{h.get('count')}")
-        elif any(h.get(p) is None for p in ("p50", "p95", "p99")):
+        live = [h for h in series if h.get("count")]
+        if not live:
+            problems.append(f"{path}: every {name!r} series is empty "
+                            f"({len(series)} series)")
+        elif any(h.get(p) is None for h in live
+                 for p in ("p50", "p95", "p99")):
             problems.append(f"{path}: {name!r} has no percentiles")
     prefill_compiles = [k for k, v in metrics.items()
                         if k.startswith('compile_total{fn="prefill')

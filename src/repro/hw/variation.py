@@ -16,6 +16,15 @@ methodology:
   pinned by tests/test_chip.py. Two seeds = two chip instances.
 * ``monte_carlo`` / ``sweep_array_size`` — the Fig.-18 harness: evaluate a
   metric over chip seeds and report mean / std / 95% CI per array size.
+* ``DriftConfig`` / ``drift_gain`` — TEMPORAL conductance drift layered on
+  top of the static process corner: programmed RRAM conductance relaxes
+  over time as ``G(t) = G0 * (1 + t/tau) ** (-nu)`` with a per-cell drift
+  exponent ``nu`` drawn from the same deterministic ``fold_in`` key scheme
+  (one extra salt, so drift draws never alias the process-variation
+  draws). ``drift_gain`` is the identity at age 0 and monotonically
+  degrading in age, so a seeded drift schedule reproduces the *same*
+  degradation trajectory in every CI run — the canary probes in
+  ``hw.health`` and the router auto-drain smoke are built on this.
 """
 from __future__ import annotations
 
@@ -71,6 +80,61 @@ def grid_gain(cfg: VariationConfig, layer_uid: int, n_tr: int, n_tc: int,
             lambda b: tile_gain(cfg, layer_uid, a, b,
                                 (array_size, tile_cols)))(tcs))
     return per_row(trs)
+
+
+# ---------------------------------------------------------------------------
+# Temporal drift (retention loss)
+# ---------------------------------------------------------------------------
+
+#: fold_in salt separating drift draws from process-variation draws — the
+#: same (seed, layer, tile) must yield INDEPENDENT static and temporal
+#: non-idealities
+_DRIFT_SALT = 0x0D21F7
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Temporal conductance-drift schedule (power-law retention loss).
+
+    ``rate`` is the mean per-cell drift exponent ``nu`` (0 = no drift —
+    ``drift_gain`` returns exact ones); ``dispersion`` is the relative
+    cell-to-cell spread of ``nu`` (cells drift at different speeds, a few
+    against the mean direction); ``tau`` normalizes age so the schedule is
+    dimensionless in ticks. ``seed`` picks the chip instance — the whole
+    trajectory is a pure function of (seed, layer, tile, age)."""
+    rate: float = 0.0
+    dispersion: float = 0.5
+    tau: float = 64.0
+    clip: float = 3.0
+    seed: int = 0
+
+    def with_seed(self, seed: int) -> "DriftConfig":
+        """Same drift law, fresh chip instance."""
+        return dataclasses.replace(self, seed=seed)
+
+
+def drift_gain(cfg: DriftConfig, age: float, layer_uid: int, tr, tc,
+               shape) -> Array:
+    """Per-cell temporal drift multipliers for ONE tile at ``age`` ticks.
+
+    ``G(age)/G0 = (1 + age/tau) ** (-nu)`` with per-cell
+    ``nu = rate * (1 + dispersion * eps)``, ``eps ~ N(0, 1)`` truncated at
+    ``+/- clip`` and keyed by ``fold_in(fold_in(fold_in(fold_in(lot,
+    SALT), layer), tr), tc)`` — identity at ``age = 0``, deterministic and
+    sampling-order-independent like ``tile_gain``, and monotone in age for
+    cells with ``nu > 0`` (the overwhelming mass for ``dispersion < 1/3``
+    at the default clip). Multiply with ``tile_gain`` to compose the
+    static corner with the temporal schedule."""
+    if cfg.rate == 0.0:
+        return jnp.ones(shape, dtype=jnp.float32)
+    key = jax.random.PRNGKey(cfg.seed)
+    key = jax.random.fold_in(key, _DRIFT_SALT)
+    key = jax.random.fold_in(key, layer_uid)
+    key = jax.random.fold_in(jax.random.fold_in(key, tr), tc)
+    eps = jnp.clip(jax.random.normal(key, shape, dtype=jnp.float32),
+                   -cfg.clip, cfg.clip)
+    nu = cfg.rate * (1.0 + cfg.dispersion * eps)
+    return jnp.power(1.0 + jnp.float32(age) / cfg.tau, -nu)
 
 
 # ---------------------------------------------------------------------------

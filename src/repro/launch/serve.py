@@ -29,6 +29,21 @@ with a recording ``repro.obs.EngineRecorder`` and write a Chrome
 (TTFT/TPOT/queue-wait/tick-phase histograms, per-prompt-length compile
 events, chip placement gauges for ``cim_tiled``). The default run keeps the
 no-op ``NullRecorder`` — zero recording overhead.
+
+Fleet health: ``--metrics-port P`` serves the live registry over HTTP while
+the run is in flight (``/metrics`` Prometheus text + ``/metrics.json``
+snapshot; ``P=0`` binds an ephemeral port and the driver self-scrapes it at
+the end — under ``--check`` the scrape must match ``exposition()`` byte for
+byte). ``--snapshot-out FILE`` writes periodic JSON snapshots during the
+run. On the router path, ``--drift-replica I --drift-rate R`` attaches a
+``hw.health.ChipHealth`` canary probe to every replica with temporal
+conductance drift injected into replica I only; the router's HealthMonitor
+polls canary deviation + SLO burn every ``--health-poll`` ticks and
+auto-drains the degraded replica once deviation crosses
+``--health-threshold``. Under ``--check`` the run must then show
+``drained_for_health >= 1``, zero lost requests, and a completion-token
+multiset identical to a healthy single engine on the same trace — the
+closed-loop CI gate.
 """
 import argparse
 import contextlib
@@ -93,12 +108,39 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default="",
                     help="write the obs/v1 metrics snapshot JSON; enables "
                          "recording")
+    ap.add_argument("--metrics-port", type=int, default=-1,
+                    help="serve live /metrics + /metrics.json over HTTP "
+                         "during the run (0 = ephemeral port; -1 = off); "
+                         "enables recording")
+    ap.add_argument("--snapshot-out", default="",
+                    help="write periodic JSON metric snapshots to this "
+                         "path during the run; enables recording")
+    ap.add_argument("--snapshot-every", type=float, default=1.0,
+                    help="seconds between periodic snapshots "
+                         "(--snapshot-out)")
+    ap.add_argument("--drift-replica", type=int, default=-1,
+                    help="router path only: inject temporal conductance "
+                         "drift into this replica's chip-health canary "
+                         "(-1 = no drift / no health monitor)")
+    ap.add_argument("--drift-rate", type=float, default=0.05,
+                    help="mean drift exponent nu for the degraded replica "
+                         "(hw.variation.DriftConfig.rate)")
+    ap.add_argument("--health-threshold", type=float, default=0.05,
+                    help="canary relative-deviation threshold above which "
+                         "the HealthMonitor drains a replica")
+    ap.add_argument("--health-poll", type=int, default=2,
+                    help="router ticks between HealthMonitor polls")
     args = ap.parse_args(argv)
 
     if args.replicas > 1 and args.mesh_model:
         raise SystemExit("--replicas and --mesh-model are mutually "
                          "exclusive: a router replica holds the whole "
                          "model on its own device(s)")
+    if args.drift_replica >= 0 and not (0 <= args.drift_replica
+                                        < args.replicas and
+                                        args.replicas > 1):
+        raise SystemExit("--drift-replica needs the router path: require "
+                         "--replicas > 1 and 0 <= drift-replica < replicas")
 
     arch = get_arch(args.arch, smoke=args.smoke)
     m = arch.model
@@ -124,11 +166,25 @@ def main(argv=None):
         mesh_ctx = make_host_mesh(model=args.mesh_model)
 
     recorder = None
-    if args.trace_out or args.metrics_out:
+    if (args.trace_out or args.metrics_out or args.snapshot_out
+            or args.metrics_port >= 0):
         from repro.obs import EngineRecorder
         recorder = EngineRecorder()
 
+    server = None
+    if args.metrics_port >= 0:
+        from repro.obs import MetricsHTTPServer
+        server = MetricsHTTPServer(recorder, port=args.metrics_port).start()
+        print(f"metrics endpoint -> {server.url}")
+    writer = None
+    if args.snapshot_out:
+        from repro.obs import PeriodicSnapshotWriter
+        writer = PeriodicSnapshotWriter(
+            recorder, args.snapshot_out,
+            interval_s=args.snapshot_every).start()
+
     router = None
+    ref_comps = None
     with mesh_ctx:
         queue = AdmissionQueue(args.queue_cap or None)
         if args.replicas > 1:
@@ -163,7 +219,45 @@ def main(argv=None):
             router = Router(replicas, queue=queue, recorder=recorder)
             if args.drain_tick:
                 router.schedule_drain(args.drain_replica, args.drain_tick)
+            if args.drift_replica >= 0:
+                from repro.hw.health import ChipHealth, ProbeGeometry
+                from repro.hw.tiles import TileConfig
+                from repro.hw.variation import DriftConfig
+                from repro.obs.slo import default_serving_slos
+                mon = router.enable_health(
+                    poll_every=args.health_poll,
+                    drift_threshold=args.health_threshold,
+                    # lenient latency SLOs: on a CPU smoke the wall-clock
+                    # TTFT/TPOT are compile-noise, and this gate is about
+                    # the DRIFT loop — a jitter-drained healthy replica
+                    # would make the token-multiset check meaningless
+                    slos=lambda: default_serving_slos(ttft_s=120.0,
+                                                      tpot_s=60.0,
+                                                      queue_wait_ticks=1e9))
+                for i in range(args.replicas):
+                    # every replica carries a canary probe; only the
+                    # degraded one drifts (tau=4: deviation crosses the
+                    # default threshold within ~a dozen ticks)
+                    drifting = (i == args.drift_replica)
+                    mon.attach_chip(i, ChipHealth(
+                        tile=TileConfig(array_size=64, tile_cols=16),
+                        drift=DriftConfig(
+                            rate=args.drift_rate if drifting else 0.0,
+                            tau=4.0, seed=args.seed),
+                        geometry=ProbeGeometry(layer_uids=(0, 1),
+                                               tiles_per_layer=2),
+                        registry=(recorder.metrics if recorder else None),
+                        labels={"replica": str(i)}))
             comps = router.run(reqs)
+            if args.check and args.drift_replica >= 0:
+                # healthy single-engine reference on the SAME trace (same
+                # deployed params, warm caches): greedy decode is
+                # deterministic, so the auto-drained fleet must emit the
+                # identical completion-token multiset
+                ref_eng = Engine(eng.params, m, n_slots=args.slots,
+                                 max_len=max_len,
+                                 **page_kw).adopt_compiled(eng)
+                ref_comps = ref_eng.run(list(reqs))
         else:
             eng = Engine(params, m, n_slots=args.slots, max_len=max_len,
                          queue=queue, recorder=recorder, **page_kw)
@@ -212,6 +306,21 @@ def main(argv=None):
         if args.metrics_out:
             print(f"metrics -> {recorder.export_metrics(args.metrics_out)}")
 
+    if writer is not None:
+        print(f"snapshots -> {writer.stop()} ({writer.writes} writes)")
+    scrape = live_snap = None
+    if server is not None:
+        # self-scrape the live endpoint after all telemetry has landed:
+        # the text scrape must equal the registry exposition exactly
+        import urllib.request
+        with urllib.request.urlopen(server.url) as resp:
+            scrape = resp.read().decode()
+        with urllib.request.urlopen(server.url + ".json") as resp:
+            live_snap = json.loads(resp.read().decode())
+        print(f"scraped {server.url}: {len(scrape)} bytes "
+              f"({server.scrapes} scrapes served)")
+        server.stop()
+
     rep = router.report() if router is not None else eng.stats.report()
     kan_note = (f" kan_backend={m.kan_backend} (deployed once)"
                 if eng.kan_deployed else "")
@@ -223,6 +332,16 @@ def main(argv=None):
         print(f"  rid={c.rid} reason={c.reason} slot={c.slot} "
               f"ticks={c.admitted_tick}->{c.finished_tick} "
               f"tokens={list(c.tokens)[:8]}")
+
+    if args.check and scrape is not None:
+        if scrape != recorder.metrics.exposition():
+            raise SystemExit("metrics check FAILED: live /metrics scrape "
+                             "does not match registry exposition")
+        if live_snap.get("schema") != "obs/v1":
+            raise SystemExit("metrics check FAILED: /metrics.json schema "
+                             f"is {live_snap.get('schema')!r}, want obs/v1")
+        print("metrics endpoint check OK: scrape matches exposition, "
+              "snapshot schema obs/v1")
 
     if args.check:
         problems = []
@@ -243,11 +362,33 @@ def main(argv=None):
                 problems.append("no EOS eviction observed")
             if args.drain_tick and rep["drains"] < 1:
                 problems.append("scheduled drain never fired")
+            if args.drift_replica >= 0:
+                if rep["drained_for_health"] < 1:
+                    problems.append("health monitor never drained the "
+                                    "degraded replica")
+                if not router.draining[args.drift_replica]:
+                    problems.append(f"degraded replica "
+                                    f"{args.drift_replica} is not draining")
+                if ref_comps is not None:
+                    fleet_toks = sorted(
+                        (c.rid, tuple(int(t) for t in c.tokens))
+                        for c in comps)
+                    ref_toks = sorted(
+                        (c.rid, tuple(int(t) for t in c.tokens))
+                        for c in ref_comps)
+                    if fleet_toks != ref_toks:
+                        problems.append(
+                            "auto-drained fleet tokens differ from the "
+                            "healthy single-engine reference")
             if problems:
                 raise SystemExit("router check FAILED: " + "; ".join(problems))
             print(f"router check OK: zero lost requests "
                   f"({rep['completed']}/{args.requests} completed, "
                   f"{rep['requeued']} requeued), slot reuse, EOS eviction")
+            if args.drift_replica >= 0:
+                print(f"health check OK: replica {args.drift_replica} "
+                      f"auto-drained ({rep['drained_for_health']} health "
+                      "drains), tokens identical to healthy reference")
         else:
             if rep["completed"] != args.requests:
                 problems.append(f"completed {rep['completed']} != "

@@ -16,18 +16,37 @@ the default ``NullRecorder`` keeps the hot path untouched. ``hw.chip``
 publishes chip placement/utilization telemetry into the same registry, so
 one ``EngineRecorder.snapshot()`` describes the whole stack.
 
-Note: ``metrics`` and ``trace`` are stdlib-only; ``profile`` imports jax,
-so it is NOT re-exported here — import ``repro.obs.profile`` directly.
+Fleet-health additions (all stdlib-only):
+
+* ``sketch``   — mergeable DDSketch-style quantile sketch with a 1%
+                 relative-error guarantee; per-replica latency sketches
+                 merge into one fleet snapshot.
+* ``slo``      — SLO objectives over rolling tick windows with
+                 multi-window burn-rate alerts (``SLOMonitor``).
+* ``export``   — live ``http.server`` Prometheus endpoint
+                 (``MetricsHTTPServer``) + periodic JSON snapshots
+                 (``PeriodicSnapshotWriter``).
+
+Note: ``metrics``, ``trace``, ``sketch``, ``slo`` and ``export`` are
+stdlib-only; ``profile`` imports jax, so it is NOT re-exported here —
+import ``repro.obs.profile`` directly.
 """
+from repro.obs.export import (MetricsHTTPServer,  # noqa: F401
+                              PeriodicSnapshotWriter)
 from repro.obs.metrics import (Counter, DEFAULT_LATENCY_BUCKETS,  # noqa: F401
                                Gauge, Histogram, MetricsRegistry,
                                log_buckets)
 from repro.obs.recorder import (EngineRecorder, NullRecorder,  # noqa: F401
                                 SNAPSHOT_SCHEMA)
+from repro.obs.sketch import DEFAULT_ALPHA, QuantileSketch  # noqa: F401
+from repro.obs.slo import (SLOMonitor, SLOObjective,  # noqa: F401
+                           SLOTracker, default_serving_slos)
 from repro.obs.trace import TraceRecorder  # noqa: F401
 
 __all__ = [
-    "Counter", "DEFAULT_LATENCY_BUCKETS", "EngineRecorder", "Gauge",
-    "Histogram", "MetricsRegistry", "NullRecorder", "SNAPSHOT_SCHEMA",
-    "TraceRecorder", "log_buckets",
+    "Counter", "DEFAULT_ALPHA", "DEFAULT_LATENCY_BUCKETS", "EngineRecorder",
+    "Gauge", "Histogram", "MetricsHTTPServer", "MetricsRegistry",
+    "NullRecorder", "PeriodicSnapshotWriter", "QuantileSketch",
+    "SLOMonitor", "SLOObjective", "SLOTracker", "SNAPSHOT_SCHEMA",
+    "TraceRecorder", "default_serving_slos", "log_buckets",
 ]

@@ -46,10 +46,36 @@ def log_buckets(lo: float, hi: float, per_decade: int = 3) -> Tuple[float, ...]:
 DEFAULT_LATENCY_BUCKETS = log_buckets(1e-6, 100.0, per_decade=3)
 
 
+def _escape_label_value(v: str) -> str:
+    """Prometheus text-format label-value escaping: backslash, double
+    quote, and newline must be escaped (in that order — backslash first so
+    the escapes themselves survive)."""
+    return (str(v).replace("\\", r"\\").replace('"', r"\"")
+            .replace("\n", r"\n"))
+
+
+def _escape_help(text: str) -> str:
+    """``# HELP`` line escaping: backslash and newline (quotes are legal)."""
+    return text.replace("\\", r"\\").replace("\n", r"\n")
+
+
+def _format_value(v: float) -> str:
+    """Render a sample value / ``le`` bound the way Prometheus parsers
+    expect: ``+Inf`` / ``-Inf`` / ``NaN`` specials, shortest-repr floats
+    otherwise (Go's strconv parses Python's repr output)."""
+    v = float(v)
+    if math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if math.isnan(v):
+        return "NaN"
+    return repr(v)
+
+
 def _label_suffix(labels: Dict[str, str]) -> str:
     if not labels:
         return ""
-    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    inner = ",".join(f'{k}="{_escape_label_value(v)}"'
+                     for k, v in sorted(labels.items()))
     return "{" + inner + "}"
 
 
@@ -229,7 +255,12 @@ class MetricsRegistry:
         return json.dumps(self.snapshot(), **kw)
 
     def exposition(self) -> str:
-        """Prometheus text exposition format."""
+        """Prometheus text exposition format, conformant per the text-format
+        spec: one ``# TYPE`` (and ``# HELP``, escaped) per metric name,
+        histograms as CUMULATIVE ``_bucket`` series ending with
+        ``le="+Inf"`` plus ``_sum``/``_count``, label values escaped
+        (backslash / quote / newline), and ``+Inf``/``-Inf``/``NaN`` value
+        specials — pinned by the conformance test in tests/test_obs.py."""
         lines: List[str] = []
         seen_header = set()
         with self._lock:
@@ -238,16 +269,17 @@ class MetricsRegistry:
             if m.name not in seen_header:
                 seen_header.add(m.name)
                 if m.help:
-                    lines.append(f"# HELP {m.name} {m.help}")
+                    lines.append(f"# HELP {m.name} {_escape_help(m.help)}")
                 lines.append(f"# TYPE {m.name} {m.kind}")
             if isinstance(m, Histogram):
                 for le, cum in m.cumulative():
                     lab = dict(m.labels)
-                    lab["le"] = "+Inf" if math.isinf(le) else repr(le)
+                    lab["le"] = _format_value(le)
                     lines.append(f"{m.name}_bucket{_label_suffix(lab)} {cum}")
                 suf = _label_suffix(m.labels)
-                lines.append(f"{m.name}_sum{suf} {m.sum}")
+                lines.append(f"{m.name}_sum{suf} {_format_value(m.sum)}")
                 lines.append(f"{m.name}_count{suf} {m.count}")
             else:
-                lines.append(f"{m.key} {m.value}")
+                lines.append(f"{m.name}{_label_suffix(m.labels)} "
+                             f"{_format_value(m.value)}")
         return "\n".join(lines) + "\n"

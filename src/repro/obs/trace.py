@@ -122,6 +122,15 @@ class TraceRecorder:
         for tid, name in _THREAD_NAMES.items():
             meta.append({"ph": "M", "name": "thread_name", "pid": self.pid,
                          "tid": tid, "args": {"name": name}})
+        # ring-truncation marker: a metadata event (not in the ring, so it
+        # can never itself be evicted) tells a Perfetto session the view is
+        # the most-recent window, with the eviction count inline — without
+        # it, "otherData" is invisible in the UI and a truncated trace reads
+        # as a complete one
+        meta.append({"ph": "M", "name": "trace_truncation", "pid": self.pid,
+                     "tid": TID_ENGINE,
+                     "args": {"dropped_events": self.dropped,
+                              "capacity": self.capacity}})
         return {"traceEvents": meta + self.events(),
                 "displayTimeUnit": "ms",
                 "otherData": {"dropped_events": self.dropped}}

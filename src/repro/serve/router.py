@@ -35,6 +35,16 @@ deploy-once) weights. This module is the routing layer above them:
   ``dist.fault.PreemptionHandler`` to a replica so a SIGTERM (or an
   admin ``trigger()``) drains it on the next tick — the single-process
   analogue of the elastic-restart path in ``dist.fault``.
+* **Closed-loop health.** ``enable_health()`` attaches a
+  :class:`HealthMonitor` that polls each live replica every few ticks:
+  SLO burn rates (``repro.obs.slo``) fed from the replica's own
+  ``EngineStats``, plus optional chip drift probes
+  (``repro.hw.health.ChipHealth`` canary rows + ADC saturation). A
+  replica breaching either signal is auto-drained through the same
+  lossless requeue path — requests finish elsewhere with identical
+  tokens, and the drain lands in ``RouterStats.drained_for_health`` and
+  the report's ``health.events`` audit trail. The monitor never drains
+  the last live replica.
 * **Replica-agnostic engines.** The router talks to replicas through a
   small duck-typed seam (``try_admit`` / ``step`` / ``preempt`` /
   ``drain_queued`` / the host state arrays) — tests/test_router.py drives
@@ -56,11 +66,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.obs.recorder import NullRecorder
+from repro.obs.sketch import QuantileSketch
+from repro.obs.slo import SLOMonitor, SLOObjective, default_serving_slos
 from repro.serve.paging import page_hashes
 from repro.serve.scheduler import AdmissionQueue, Completion, Request
 
@@ -78,6 +90,7 @@ class RouterStats:
     completed: int = 0                # completions returned by step()
     requeued: int = 0                 # in-flight requests recycled by drains
     drains: int = 0                   # drain() calls
+    drained_for_health: int = 0       # drains triggered by the HealthMonitor
     replicas_removed: int = 0         # drains with remove=True
     affinity_hits: int = 0            # dispatches won on resident prefix pages
     ticks: int = 0                    # router ticks (incl. fast-forwarded)
@@ -119,6 +132,7 @@ class RouterStats:
             "rejected": self.rejected,
             "requeued": self.requeued,
             "drains": self.drains,
+            "drained_for_health": self.drained_for_health,
             "replicas_removed": self.replicas_removed,
             "affinity_hits": self.affinity_hits,
             "routed": list(self.routed),
@@ -131,6 +145,147 @@ class RouterStats:
             "busy_s_max": round(busy_max, 4),
             "agg_tokens_per_s": (round(agg, 2) if agg is not None else None),
             "per_replica": list(per_replica),
+        }
+
+
+class HealthMonitor:
+    """Closed-loop fleet health: poll per-replica SLO burn + chip drift,
+    auto-drain a breaching replica with zero lost requests.
+
+    Every ``poll_every`` router ticks the monitor, per live replica:
+
+    1. feeds that replica's ``SLOMonitor`` from its ``EngineStats`` deltas
+       (new TTFT/TPOT samples; completions as good events and rejections +
+       preemptions as bad events on the error objective; global queue
+       depth against the queue-wait objective) and advances the SLO tick
+       window;
+    2. probes the replica's chip-health source, if attached (anything with
+       ``probe(age) -> dict`` carrying ``max_rel_dev`` — ``hw.health
+       .ChipHealth`` is the real one), at ``age = tick``;
+    3. drains the replica via ``Router.drain`` when either signal breaches
+       (SLO burn above factor on both windows, or canary deviation above
+       ``drift_threshold``). The drain requeues all in-flight work on the
+       global queue — greedy decode is deterministic, so the re-run on a
+       healthy replica emits identical tokens (the CI degraded-replica
+       smoke asserts the token multiset equals a healthy single engine's).
+
+    The monitor never drains the LAST live replica: one degraded replica
+    still finishing work beats a fleet that deadlocks with everything
+    queued and nowhere to run — the breach is recorded as a suppressed
+    event instead. Draining/removed replicas are skipped entirely (their
+    stats are frozen mid-evacuation); ``Router.resume`` re-enters them
+    into the polling set. Every action lands in ``events`` as ``{"tick",
+    "replica", "reasons", "action"}``, the audit trail surfaced in
+    ``Router.report()["health"]``.
+    """
+
+    def __init__(self, router: "Router", *, poll_every: int = 4,
+                 drift_threshold: float = 0.05,
+                 slos: Optional[Callable[[], Sequence[SLOObjective]]] = None):
+        if poll_every < 1:
+            raise ValueError(f"poll_every must be >= 1, got {poll_every}")
+        self.router = router
+        self.poll_every = int(poll_every)
+        self.drift_threshold = float(drift_threshold)
+        make = slos if slos is not None else default_serving_slos
+        n = len(router.replicas)
+        self.slo = [SLOMonitor(make()) for _ in range(n)]
+        self._cursor = [{"ttft": 0, "tpot": 0, "good": 0, "bad": 0}
+                        for _ in range(n)]
+        self._chips: Dict[int, Any] = {}
+        self.last_probe: Dict[int, dict] = {}
+        self.events: List[dict] = []
+        self.polls = 0
+
+    def attach_chip(self, replica: int, source) -> None:
+        """Register a chip-health source (duck-typed ``probe(age)``) for
+        ``replica`` — probed on every poll, breach drains the replica."""
+        self._chips[replica] = source
+
+    def _feed_slo(self, i: int) -> None:
+        """Advance replica ``i``'s SLO window by the stats accumulated
+        since the last poll (cursor-based, so samples are never double
+        counted). Feeds only the objectives present in the monitor, so a
+        custom ``slos`` factory may track any subset of the defaults."""
+        stats, mon, cur = (self.router.replicas[i].stats, self.slo[i],
+                           self._cursor[i])
+        have = mon.trackers
+        if "ttft" in have:
+            for v in stats.ttft_s[cur["ttft"]:]:
+                mon.observe("ttft", v)
+        cur["ttft"] = len(stats.ttft_s)
+        if "tpot" in have:
+            for v in stats.tpot_s[cur["tpot"]:]:
+                mon.observe("tpot", v)
+        cur["tpot"] = len(stats.tpot_s)
+        good, bad = stats.completed, stats.rejected + stats.preempted
+        if "errors" in have:
+            for _ in range(good - cur["good"]):
+                mon.observe_event("errors", True)
+            for _ in range(bad - cur["bad"]):
+                mon.observe_event("errors", False)
+        cur["good"], cur["bad"] = good, bad
+        if "queue_wait" in have:
+            mon.observe("queue_wait", float(len(self.router.queue)))
+        mon.tick()
+
+    def _sync_error_cursor(self, i: int) -> None:
+        """Snap replica ``i``'s bad-event cursor to now — called right
+        after the monitor itself drains it, so the preemptions of its own
+        corrective action don't count as fresh errors on resume."""
+        stats = self.router.replicas[i].stats
+        self._cursor[i]["bad"] = stats.rejected + stats.preempted
+
+    def poll(self, tick: int) -> List[dict]:
+        """One health pass at router tick ``tick`` (no-op except every
+        ``poll_every`` ticks). Returns the events recorded this pass."""
+        if tick % self.poll_every != 0:
+            return []
+        self.polls += 1
+        fired: List[dict] = []
+        r = self.router
+        for i in range(len(r.replicas)):
+            if r.removed[i] or r.draining[i]:
+                continue
+            self._feed_slo(i)
+            reasons = [f"slo:{name}" for name in self.slo[i].breaching()]
+            chip = self._chips.get(i)
+            if chip is not None:
+                probe = chip.probe(float(tick))
+                self.last_probe[i] = probe
+                if probe["max_rel_dev"] > self.drift_threshold:
+                    reasons.append(f"drift:{probe['max_rel_dev']:.4f}")
+            if not reasons:
+                continue
+            live = [j for j in range(len(r.replicas))
+                    if not r.removed[j] and not r.draining[j]]
+            if len(live) <= 1:
+                action = "suppressed_last_replica"
+            else:
+                r.drain(i)
+                r.stats.drained_for_health += 1
+                self._sync_error_cursor(i)
+                action = "drained"
+            ev = {"tick": int(tick), "replica": i, "reasons": reasons,
+                  "action": action}
+            self.events.append(ev)
+            fired.append(ev)
+        return fired
+
+    def summary(self) -> dict:
+        """JSON-ready state for ``Router.report()``: per-replica SLO
+        verdicts, last drift probes, and the drain audit trail."""
+        return {
+            "poll_every": self.poll_every,
+            "drift_threshold": self.drift_threshold,
+            "polls": self.polls,
+            "slo_verdicts": {str(i): m.verdicts()
+                             for i, m in enumerate(self.slo)},
+            "drift": {str(i): {"age": p["age"],
+                               "max_rel_dev": p["max_rel_dev"],
+                               "adc_saturation": p["adc_saturation"]}
+                      for i, p in self.last_probe.items()},
+            "events": list(self.events),
         }
 
 
@@ -178,8 +333,16 @@ class Router:
         self.stats = RouterStats(n_replicas=len(replicas))
         self.draining = [False] * len(replicas)
         self.removed = [False] * len(replicas)
+        self.health: Optional[HealthMonitor] = None
         self._handlers: Dict[int, Any] = {}
         self._scheduled: List[Tuple[int, int, bool]] = []
+
+    def enable_health(self, **kwargs) -> HealthMonitor:
+        """Attach a :class:`HealthMonitor` (kwargs forwarded to it) and
+        return it — ``step()`` polls it from then on. Attach chip-health
+        sources on the returned monitor via ``attach_chip``."""
+        self.health = HealthMonitor(self, **kwargs)
+        return self.health
 
     @staticmethod
     def _geometry(eng) -> tuple:
@@ -311,11 +474,15 @@ class Router:
     # -- the tick ------------------------------------------------------------
 
     def step(self) -> List[Completion]:
-        """One router tick: fire due scheduled/signalled drains, dispatch
+        """One router tick: poll the health monitor (when attached — may
+        auto-drain a breaching replica), fire due scheduled/signalled
+        drains, dispatch
         the ready queue head(s) in global FIFO order, then step every live
         replica once (serially — per-replica busy wall is accumulated in
         ``stats.busy_s``). Returns all completions from this tick."""
         t0 = time.perf_counter()
+        if self.health is not None:
+            self.health.poll(self.tick_no)
         for i, h in list(self._handlers.items()):
             if h.should_stop and not self.draining[i] and not self.removed[i]:
                 self.drain(i)
@@ -390,9 +557,15 @@ class Router:
 
     def report(self) -> dict:
         """``RouterStats.aggregate`` over the live fleet: router counters,
-        modeled-concurrent ``agg_tokens_per_s``, and one engine report per
-        replica (tagged with its routing share and drain state)."""
+        modeled-concurrent ``agg_tokens_per_s``, one engine report per
+        replica (tagged with its routing share and drain state), a
+        ``fleet`` section merging every replica's latency sketches into
+        one snapshot (count-exact merge, same alpha bound as the
+        per-replica sketches), and — when a health monitor is attached —
+        its ``health`` summary (SLO verdicts, drift probes, drain
+        events)."""
         per = []
+        ttft_sks, tpot_sks = [], []
         for i, eng in enumerate(self.replicas):
             r = {"replica": i,
                  "routed": self.stats.routed[i],
@@ -400,4 +573,16 @@ class Router:
                  "removed": self.removed[i]}
             r.update(eng.stats.report())
             per.append(r)
-        return self.stats.aggregate(per)
+            ttft, tpot = eng.stats.latency_sketches()
+            ttft_sks.append(ttft)
+            tpot_sks.append(tpot)
+        agg = self.stats.aggregate(per)
+        fleet_ttft = QuantileSketch.merge_all(ttft_sks)
+        fleet_tpot = QuantileSketch.merge_all(tpot_sks)
+        agg["fleet"] = {
+            "ttft_sketch": fleet_ttft.percentiles() if fleet_ttft else None,
+            "tpot_sketch": fleet_tpot.percentiles() if fleet_tpot else None,
+        }
+        if self.health is not None:
+            agg["health"] = self.health.summary()
+        return agg

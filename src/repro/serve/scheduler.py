@@ -26,6 +26,8 @@ from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.sketch import QuantileSketch
+
 
 @dataclasses.dataclass
 class Request:
@@ -223,6 +225,18 @@ class EngineStats:
         return {"ttft": self._percentiles(self.ttft_s),
                 "tpot": self._percentiles(self.tpot_s)}
 
+    def latency_sketches(self) -> Tuple[QuantileSketch, QuantileSketch]:
+        """(TTFT, TPOT) ``QuantileSketch``es over the recorded samples.
+
+        Built lazily at report time — sketch bucket counts are a multiset
+        statistic, so sketching the finished sample list is identical to
+        having observed online, and the engine hot path stays untouched.
+        These are what ``Router.report`` merges into the fleet snapshot."""
+        return (QuantileSketch.from_samples(
+                    v for v in self.ttft_s if np.isfinite(v)),
+                QuantileSketch.from_samples(
+                    v for v in self.tpot_s if np.isfinite(v)))
+
     def report(self) -> dict:
         """Machine-readable run summary: throughput, occupancy, eviction
         accounting, latency percentiles, and the paging/prefix-cache
@@ -231,6 +245,7 @@ class EngineStats:
         benchmarks/records_check.py gates on."""
         wall = self.wall_s or float("nan")
         lat = self.latency_report()
+        ttft_sk, tpot_sk = self.latency_sketches()
         return {
             "n_slots": self.n_slots,
             "ticks": self.ticks,
@@ -254,6 +269,12 @@ class EngineStats:
             if self.wall_s else None,
             "ttft_s": lat["ttft"],
             "tpot_s": lat["tpot"],
+            # sketch-derived twins of the numpy percentiles above: same
+            # samples through the mergeable QuantileSketch (alpha-bounded
+            # relative error) — cross-checked against the exact fields in
+            # tests/test_obs.py, merged fleet-wide by Router.report()
+            "ttft_sketch": ttft_sk.percentiles(),
+            "tpot_sketch": tpot_sk.percentiles(),
             "page_size": self.page_size,
             "n_pages": self.n_pages,
             "pages_in_use_peak": self.pages_in_use_peak,

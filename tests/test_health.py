@@ -1,0 +1,161 @@
+"""Tests for repro.hw.health (canary probes, ADC saturation counters) and
+the temporal drift model in repro.hw.variation.
+
+Everything here must be DETERMINISTIC: the drift trajectory is a pure
+function of (seed, layer, tile, age), so the CI degraded-replica smoke can
+replay the exact same degradation every run.
+"""
+import numpy as np
+import pytest
+
+from repro.hw.health import ChipHealth, ProbeGeometry, canary_readout
+from repro.hw.tiles import TileConfig
+from repro.hw.variation import DriftConfig, VariationConfig, drift_gain
+from repro.obs import MetricsRegistry
+
+TILE = TileConfig(array_size=64, tile_cols=16)
+SHAPE = (8, 4)
+
+# ---------------------------------------------------------------------------
+# drift model
+# ---------------------------------------------------------------------------
+
+
+def test_drift_gain_identity_when_off_or_fresh():
+    on = DriftConfig(rate=0.05, seed=3)
+    assert np.allclose(np.asarray(drift_gain(on, 0.0, 0, 0, 0, SHAPE)), 1.0)
+    off = DriftConfig(rate=0.0)
+    assert np.array_equal(
+        np.asarray(drift_gain(off, 100.0, 0, 0, 0, SHAPE)),
+        np.ones(SHAPE))
+
+
+def test_drift_gain_deterministic_and_keyed():
+    cfg = DriftConfig(rate=0.05, seed=7)
+    a = np.asarray(drift_gain(cfg, 10.0, 2, 1, 0, SHAPE))
+    b = np.asarray(drift_gain(cfg, 10.0, 2, 1, 0, SHAPE))
+    assert np.array_equal(a, b)                       # pure function of key
+    # different (layer, tile) and different seed draw different cells
+    other_tile = np.asarray(drift_gain(cfg, 10.0, 2, 0, 0, SHAPE))
+    other_seed = np.asarray(drift_gain(cfg.with_seed(8), 10.0, 2, 1, 0,
+                                       SHAPE))
+    assert not np.array_equal(a, other_tile)
+    assert not np.array_equal(a, other_seed)
+
+
+def test_drift_gain_power_law_shape():
+    cfg = DriftConfig(rate=0.05, dispersion=0.5, tau=4.0, seed=1)
+    ages = [1.0, 4.0, 16.0, 64.0]
+    means = [float(np.mean(np.asarray(drift_gain(cfg, a, 0, 0, 0, SHAPE))))
+             for a in ages]
+    # conductance decays monotonically with age on average
+    assert all(m2 < m1 for m1, m2 in zip(means, means[1:]))
+    assert all(0.0 < m < 1.0 for m in means)
+    # dispersion puts a few cells above 1 (drifting against the mean) while
+    # the bulk loses conductance
+    g = np.asarray(drift_gain(cfg, 64.0, 0, 0, 0, (64, 64)))
+    assert np.mean(g < 1.0) > 0.9
+    assert np.any(g > 1.0)
+
+
+# ---------------------------------------------------------------------------
+# canary readout
+# ---------------------------------------------------------------------------
+
+
+def test_canary_readout_ideal_is_uniform_and_unsaturated():
+    codes, sat = canary_readout(TILE, None, headroom=0.7)
+    assert codes.shape == (TILE.tile_cols,)
+    assert sat == 0
+    # uniform drive + full-code rows -> every column reads the same
+    assert len(set(codes.tolist())) == 1
+    assert codes[0] > 0
+
+
+def test_canary_readout_saturates_past_full_scale():
+    # headroom > 1 aims the ideal analog sum past the ADC rails: every one
+    # of the 8 bit-slices clips on every column (the self-test path)
+    _, sat = canary_readout(TILE, None, headroom=1.5)
+    assert sat == 8 * TILE.tile_cols
+    # gain excursions above 1/headroom do the same with sane headroom
+    hot = np.full((TILE.array_size, TILE.tile_cols), 1.6)
+    _, sat = canary_readout(TILE, hot, headroom=0.7)
+    assert sat == 8 * TILE.tile_cols
+
+
+def test_canary_readout_sees_conductance_loss():
+    faded = np.full((TILE.array_size, TILE.tile_cols), 0.8)
+    ideal, _ = canary_readout(TILE, None, headroom=0.7)
+    codes, sat = canary_readout(TILE, faded, headroom=0.7)
+    assert sat == 0
+    assert np.all(codes < ideal)
+    rel = float(np.abs(codes - ideal).mean() / np.abs(ideal).mean())
+    assert rel == pytest.approx(0.2, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# ChipHealth probes
+# ---------------------------------------------------------------------------
+
+
+def _chip(**kw):
+    kw.setdefault("tile", TILE)
+    kw.setdefault("geometry", ProbeGeometry(layer_uids=(0, 1),
+                                            tiles_per_layer=2))
+    return ChipHealth(**kw)
+
+
+def test_probe_ideal_chip_reads_zero_deviation():
+    hp = _chip()
+    out = hp.probe(age=100.0)      # no variation, no drift: age irrelevant
+    assert out["max_rel_dev"] == 0.0
+    assert out["adc_saturation"] == 0
+    assert len(out["tiles"]) == 4
+    assert {(t["layer"], t["tile"]) for t in out["tiles"]} == {
+        (0, 0), (0, 1), (1, 0), (1, 1)}
+    assert hp.last is out
+
+
+def test_probe_deviation_grows_with_age_and_is_deterministic():
+    def fresh():
+        return _chip(drift=DriftConfig(rate=0.05, tau=4.0, seed=0))
+
+    hp = fresh()
+    assert hp.probe(0.0)["max_rel_dev"] == 0.0
+    devs = [hp.probe(a)["max_rel_dev"] for a in (2.0, 8.0, 32.0)]
+    assert devs[0] > 0.0
+    assert devs == sorted(devs)
+    # the trajectory replays exactly on a fresh instance (CI determinism)
+    assert fresh().probe(32.0)["max_rel_dev"] == devs[-1]
+
+
+def test_probe_static_variation_differs_per_tile():
+    hp = _chip(variation=VariationConfig(sigma=0.1, seed=2))
+    out = hp.probe(0.0)
+    assert out["max_rel_dev"] > 0.0
+    assert len({t["rel_dev"] for t in out["tiles"]}) > 1
+
+
+def test_probe_counts_saturation_cumulatively():
+    hp = _chip(headroom=1.5, geometry=ProbeGeometry())
+    per_probe = 8 * TILE.tile_cols
+    assert hp.probe(0.0)["adc_saturation"] == per_probe
+    out = hp.probe(1.0)
+    assert out["adc_saturation"] == per_probe
+    assert out["adc_saturation_total"] == 2 * per_probe
+
+
+def test_probe_publishes_gauges_with_labels():
+    reg = MetricsRegistry()
+    hp = _chip(drift=DriftConfig(rate=0.05, tau=4.0, seed=0),
+               registry=reg, labels={"replica": "1"})
+    out = hp.probe(8.0)
+    snap = reg.snapshot()["metrics"]
+    key = 'chip_canary_rel_dev{layer="0",replica="1",tile="0"}'
+    assert key in snap
+    t00 = next(t for t in out["tiles"]
+               if t["layer"] == 0 and t["tile"] == 0)
+    assert snap[key]["value"] == pytest.approx(t00["rel_dev"])
+    assert 'chip_adc_saturation{layer="1",replica="1",tile="1"}' in snap
+    assert 'chip_adc_saturation_total{layer="0",replica="1",tile="0"}' \
+        in snap

@@ -107,6 +107,45 @@ def test_snapshot_exposition_round_trip():
     assert "lat_seconds_count 2" in text
 
 
+def test_exposition_prometheus_conformance():
+    """Text-format conformance: label values escaped (backslash, quote,
+    newline), HELP escaped, value specials rendered as +Inf/-Inf/NaN, and
+    histogram buckets CUMULATIVE up to an explicit +Inf bucket whose count
+    equals _count, with a numeric _sum line."""
+    reg = MetricsRegistry()
+    reg.counter("c_total", 'help with \\ and\nnewline',
+                labels={"path": 'a"b\\c\nd'}).inc(1)
+    reg.gauge("g_inf").set(float("inf"))
+    reg.gauge("g_ninf").set(float("-inf"))
+    reg.gauge("g_nan").set(float("nan"))
+    h = reg.histogram("lat_seconds", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    text = reg.exposition()
+    lines = text.splitlines()
+    # label-value escaping: backslash -> \\, quote -> \", newline -> \n
+    assert 'c_total{path="a\\"b\\\\c\\nd"} 1.0' in lines
+    # HELP escaping: backslash and newline only (quotes stay raw)
+    assert "# HELP c_total help with \\\\ and\\nnewline" in lines
+    # value specials
+    assert "g_inf +Inf" in lines
+    assert "g_ninf -Inf" in lines
+    assert "g_nan NaN" in lines
+    # cumulative le buckets + _sum/_count
+    assert 'lat_seconds_bucket{le="0.1"} 1' in lines
+    assert 'lat_seconds_bucket{le="1.0"} 2' in lines
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in lines
+    assert "lat_seconds_count 3" in lines
+    sum_line = next(ln for ln in lines if ln.startswith("lat_seconds_sum "))
+    assert float(sum_line.split()[1]) == pytest.approx(5.55)
+    # every non-comment line is "name{labels} value" with a parseable value
+    for ln in lines:
+        if not ln or ln.startswith("#"):
+            continue
+        val = ln.rsplit(" ", 1)[1]
+        assert val in ("+Inf", "-Inf", "NaN") or float(val) is not None
+
+
 # ---------------------------------------------------------------------------
 # trace
 # ---------------------------------------------------------------------------
@@ -145,7 +184,14 @@ def test_ring_buffer_eviction_counts_drops():
     assert tr.dropped == 12
     names = [e["name"] for e in tr.events()]
     assert names == [f"e{i}" for i in range(12, 20)]   # most recent window
-    assert tr.chrome_trace()["otherData"]["dropped_events"] == 12
+    ct = tr.chrome_trace()
+    assert ct["otherData"]["dropped_events"] == 12
+    # the eviction count also rides as a metadata event so a Perfetto
+    # session (which never shows otherData) still flags the truncation
+    trunc = [e for e in ct["traceEvents"]
+             if e["ph"] == "M" and e["name"] == "trace_truncation"]
+    assert len(trunc) == 1
+    assert trunc[0]["args"] == {"dropped_events": 12, "capacity": 8}
 
 
 # ---------------------------------------------------------------------------
@@ -422,3 +468,42 @@ def test_chip_report_publishes_into_registry():
     # the same registry can hold serving metrics: one snapshot, whole stack
     reg.counter("serve_submitted_total").inc()
     assert "serve_submitted_total" in reg.snapshot()["metrics"]
+
+
+# ---------------------------------------------------------------------------
+# sketch twins in EngineStats.report()
+# ---------------------------------------------------------------------------
+
+
+def test_report_sketch_twins_track_numpy_percentiles():
+    """The DDSketch twins ``ttft_sketch``/``tpot_sketch`` in
+    ``EngineStats.report()`` must track the exact numpy percentiles the
+    dashboards already plot. At n=500 the rank-based sketch estimate and
+    numpy's interpolated percentile agree to well under the 2% asserted
+    here (the documented sketch bound is 1% relative to the rank-based
+    order statistic)."""
+    from repro.serve.scheduler import EngineStats
+
+    rng = np.random.default_rng(7)
+    st = EngineStats(n_slots=2)
+    st.ttft_s = list(rng.lognormal(mean=-3.0, sigma=0.8, size=500))
+    st.tpot_s = list(rng.lognormal(mean=-5.0, sigma=0.5, size=500))
+    st.completed = 500
+    rep = st.report()
+    for exact_key, sk_key in (("ttft_s", "ttft_sketch"),
+                              ("tpot_s", "tpot_sketch")):
+        sk = rep[sk_key]
+        assert sk["n"] == 500
+        assert 0 < sk["alpha"] < 1
+        for p in ("p50", "p95", "p99"):
+            exact = rep[exact_key][p]
+            assert sk[p] == pytest.approx(exact, rel=0.02)
+
+
+def test_report_sketch_twins_empty_stats():
+    from repro.serve.scheduler import EngineStats
+
+    rep = EngineStats(n_slots=1).report()
+    assert rep["ttft_sketch"]["n"] == 0
+    assert rep["ttft_sketch"]["p95"] is None
+    assert rep["tpot_sketch"]["n"] == 0

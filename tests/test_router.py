@@ -687,3 +687,137 @@ def test_router_real_engines_drain_keeps_tokens():
     assert router.replicas[1].stats.preempted + router.stats.requeued >= 0
     for c_tokens in got.values():
         assert len(c_tokens) > 0
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor: closed-loop auto-drain
+# ---------------------------------------------------------------------------
+
+from repro.obs.slo import SLOObjective  # noqa: E402
+
+
+def _quiet_slos():
+    """An SLO set that can never trip (no latency samples arrive from the
+    FakeEngine) so drift is the only drain signal under test."""
+    return (SLOObjective("ttft", threshold=1e9),)
+
+
+class FakeProbe:
+    """Duck-typed chip-health source: canary deviation ramps linearly with
+    age (``rel_dev = rate * age``), standing in for ``hw.health
+    .ChipHealth`` so the router tests stay host-only and instant."""
+
+    def __init__(self, rate=0.0):
+        self.rate = rate
+        self.probes = 0
+
+    def probe(self, age):
+        self.probes += 1
+        return {"age": float(age),
+                "max_rel_dev": round(self.rate * age, 6),
+                "adc_saturation": 0, "adc_saturation_total": 0,
+                "tiles": []}
+
+
+def test_health_drift_drain_zero_lost_requests():
+    """A replica whose canary deviation crosses the threshold mid-trace is
+    auto-drained; every in-flight request is requeued and the fleet's
+    completion multiset still equals a healthy single-engine run."""
+    rng = np.random.RandomState(3)
+    reqs = _random_trace(rng, 40)
+    single = _completion_map(Router(_fleet(1)).run(reqs))
+    router = Router(_fleet(2))
+    mon = router.enable_health(poll_every=2, drift_threshold=0.05,
+                               slos=_quiet_slos)
+    mon.attach_chip(1, FakeProbe(rate=0.01))    # crosses 0.05 at age > 5
+    comps = router.run(reqs)
+    assert router.draining[1]
+    assert router.stats.drained_for_health == 1
+    drained = [e for e in mon.events if e["action"] == "drained"]
+    assert len(drained) == 1
+    assert drained[0]["replica"] == 1
+    assert drained[0]["reasons"] and \
+        drained[0]["reasons"][0].startswith("drift:")
+    assert drained[0]["tick"] == 6              # first poll past dev 0.05
+    _assert_tokens_expected(reqs, comps)
+    assert _completion_map(comps) == single
+    _assert_fleet_clean(router)
+    # drained replica is skipped by later polls: probe age froze at drain
+    assert mon.last_probe[1]["age"] == 6.0
+    assert mon.summary()["events"] == mon.events
+
+
+def test_health_never_drains_last_replica():
+    """Breach everywhere: the first replica drains, the survivor's breach
+    is suppressed — a degraded replica beats a deadlocked fleet."""
+    rng = np.random.RandomState(4)
+    reqs = _random_trace(rng, 20)
+    router = Router(_fleet(2))
+    mon = router.enable_health(poll_every=2, drift_threshold=0.05,
+                               slos=_quiet_slos)
+    mon.attach_chip(0, FakeProbe(rate=1.0))     # breaching from age 2
+    mon.attach_chip(1, FakeProbe(rate=1.0))
+    comps = router.run(reqs)
+    assert router.stats.drained_for_health == 1
+    assert router.draining[0] and not router.draining[1]
+    actions = [(e["replica"], e["action"]) for e in mon.events]
+    assert actions[0] == (0, "drained")
+    assert (1, "suppressed_last_replica") in actions
+    assert all(a == "suppressed_last_replica"
+               for r, a in actions if r == 1)
+    _assert_tokens_expected(reqs, comps)
+    _assert_fleet_clean(router)
+
+
+def test_health_slo_burn_drains():
+    """A burning SLO drains a replica just like drift does. queue_wait
+    with threshold -1 scores every poll bad; at objective 0.9 the all-bad
+    stream burns at 10x — far over the default factor 2 (at objective 0.5
+    it would burn at exactly 2.0, deliberately NOT strictly above)."""
+    def bad_slos():
+        return (SLOObjective("queue_wait", objective=0.9, threshold=-1.0,
+                             long_window=8, short_window=2, min_events=4),)
+
+    rng = np.random.RandomState(5)
+    reqs = _random_trace(rng, 30)
+    router = Router(_fleet(2))
+    mon = router.enable_health(poll_every=1, slos=bad_slos)
+    comps = router.run(reqs)
+    drained = [e for e in mon.events if e["action"] == "drained"]
+    assert len(drained) == 1
+    assert drained[0]["reasons"] == ["slo:queue_wait"]
+    assert router.stats.drained_for_health == 1
+    # the survivor burns too but is protected by the last-replica rule
+    assert any(e["action"] == "suppressed_last_replica"
+               for e in mon.events)
+    verdicts = mon.summary()["slo_verdicts"]
+    assert "burning" in verdicts[str(drained[0]["replica"])].values() or \
+        "burning" in verdicts[str(1 - drained[0]["replica"])].values()
+    _assert_tokens_expected(reqs, comps)
+    _assert_fleet_clean(router)
+
+
+def test_report_fleet_sketch_and_health_section():
+    """Router.report() merges per-replica latency sketches into one fleet
+    snapshot (count-exact merge) and carries the health summary."""
+    from repro.obs.sketch import QuantileSketch
+
+    router = Router(_fleet(2))
+    router.enable_health(poll_every=4)
+    router.replicas[0].stats.ttft_s = [0.1] * 50
+    router.replicas[1].stats.ttft_s = [0.3] * 50
+    rep = router.report()
+    fleet = rep["fleet"]["ttft_sketch"]
+    assert fleet["n"] == 100
+    assert fleet["p50"] == pytest.approx(0.1, rel=0.02)
+    assert fleet["p95"] == pytest.approx(0.3, rel=0.02)
+    # merge equals sketching the concatenated per-replica streams
+    whole = QuantileSketch.from_samples([0.1] * 50 + [0.3] * 50)
+    assert fleet == whole.percentiles()
+    assert rep["fleet"]["tpot_sketch"] is None   # no samples -> no sketch
+    assert rep["drained_for_health"] == 0
+    assert rep["health"]["polls"] == 0
+    assert set(rep["health"]["slo_verdicts"]) == {"0", "1"}
+    # without a monitor the report has a fleet section but no health one
+    bare = Router(_fleet(1)).report()
+    assert "fleet" in bare and "health" not in bare

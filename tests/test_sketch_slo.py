@@ -1,0 +1,239 @@
+"""Property tests for the mergeable quantile sketch (repro.obs.sketch) and
+the multi-window burn-rate SLO monitor (repro.obs.slo).
+
+The sketch's documented contract is the DDSketch guarantee: every quantile
+estimate is within ``alpha`` RELATIVE error of the exact rank-based sample
+quantile ``sorted[floor(q * (n - 1))]`` (NOT numpy's interpolated
+percentile — at small n the two conventions diverge by design). Merge must
+equal sketching the concatenated stream (count-exact; only the float
+``sum`` may differ in final bits), and must be commutative/associative so
+fleet aggregation order never matters.
+
+The SLO tests drive synthetic breach traces through the tick clock: a
+sustained breach must alert, a short spike must not (long window holds),
+and recovery must clear the alert once the short window drains.
+
+Seeded ``random`` only — no hypothesis dependency.
+"""
+import json
+import math
+import random
+
+import pytest
+
+from repro.obs.sketch import DEFAULT_ALPHA, QuantileSketch
+from repro.obs.slo import (SLOMonitor, SLOObjective, SLOTracker,
+                           default_serving_slos)
+
+# ---------------------------------------------------------------------------
+# sketch: relative-error guarantee
+# ---------------------------------------------------------------------------
+
+
+def _exact_quantile(sorted_vals, q):
+    """Rank-based order statistic the DDSketch bound is stated against."""
+    return sorted_vals[int(math.floor(q * (len(sorted_vals) - 1)))]
+
+
+def _workloads(rng):
+    """Latency-shaped sample streams across scales and distributions."""
+    return {
+        "uniform_ms": [rng.uniform(1e-3, 50e-3) for _ in range(400)],
+        "lognormal_s": [rng.lognormvariate(-2.0, 1.0) for _ in range(400)],
+        "bimodal": ([rng.uniform(1e-4, 2e-4) for _ in range(200)]
+                    + [rng.uniform(1.0, 2.0) for _ in range(200)]),
+        "heavy_tail": [rng.paretovariate(1.5) * 1e-3 for _ in range(400)],
+        "tiny_n": [rng.uniform(0.1, 1.0) for _ in range(3)],
+        "with_zeros": [0.0] * 17 + [rng.uniform(1e-3, 1.0)
+                                    for _ in range(100)],
+    }
+
+
+def test_sketch_relative_error_bound_across_workloads():
+    rng = random.Random(1234)
+    for name, vals in _workloads(rng).items():
+        sk = QuantileSketch.from_samples(vals)
+        ordered = sorted(vals)
+        for q in (0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0):
+            exact = _exact_quantile(ordered, q)
+            est = sk.quantile(q)
+            if exact == 0.0:
+                assert est == 0.0, (name, q)
+            else:
+                rel = abs(est - exact) / exact
+                assert rel <= sk.alpha + 1e-9, (name, q, rel)
+
+
+def test_sketch_exact_side_counters_and_extremes():
+    sk = QuantileSketch()
+    for v in (0.0, 0.0, -1.5, 3.0, float("nan"), float("inf")):
+        sk.observe(v)
+    # non-finite values ignored; zeros/negatives counted exactly
+    assert sk.count == 4
+    assert sk.zero_count == 2 and sk.negative_count == 1
+    assert sk.min == -1.5 and sk.max == 3.0
+    assert sk.quantile(0.0) == -1.5           # negative mass -> observed min
+    assert sk.quantile(1.0) <= 3.0            # clamped to observed max
+    assert QuantileSketch().quantile(0.5) is None
+
+
+def test_sketch_bounded_memory_collapse():
+    sk = QuantileSketch(alpha=0.01, max_bins=16)
+    # values spanning many orders of magnitude force bin-count overflow
+    for e in range(-6, 6):
+        for m in (1.0, 2.0, 5.0):
+            sk.observe(m * 10.0 ** e, n=10)
+    assert len(sk.bins) <= sk.max_bins
+    assert sk.collapsed >= 1
+    # upper quantiles keep the guarantee after collapsing the low tail
+    assert sk.quantile(0.99) == pytest.approx(5e5, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# sketch: merge semantics
+# ---------------------------------------------------------------------------
+
+
+def _state(sk):
+    """Comparable sketch state minus the float ``sum`` (addition order may
+    flip its final bits — the only documented merge inexactness)."""
+    d = sk.to_dict()
+    d.pop("sum")
+    return d
+
+
+def test_merge_equals_concat():
+    rng = random.Random(99)
+    for vals in _workloads(rng).values():
+        cut = len(vals) // 3
+        a = QuantileSketch.from_samples(vals[:cut])
+        b = QuantileSketch.from_samples(vals[cut:])
+        merged = a.merge(b)
+        whole = QuantileSketch.from_samples(vals)
+        assert _state(merged) == _state(whole)
+        assert merged.sum == pytest.approx(whole.sum, rel=1e-9)
+
+
+def test_merge_commutative_associative():
+    rng = random.Random(7)
+    parts = [[rng.lognormvariate(-2.0, 1.0) for _ in range(150)]
+             for _ in range(3)]
+    a, b, c = (QuantileSketch.from_samples(p) for p in parts)
+    assert _state(a.merge(b)) == _state(b.merge(a))
+    assert _state(a.merge(b).merge(c)) == _state(a.merge(b.merge(c)))
+    # merge is pure: inputs untouched
+    assert a.count == 150 and b.count == 150
+    # merge_all folds the same way
+    fleet = QuantileSketch.merge_all([a, b, c])
+    assert _state(fleet) == _state(a.merge(b).merge(c))
+    assert QuantileSketch.merge_all([]) is None
+
+
+def test_merge_rejects_mismatched_alpha():
+    with pytest.raises(ValueError, match="alpha"):
+        QuantileSketch(0.01).merge(QuantileSketch(0.02))
+
+
+def test_serialization_round_trip_bit_exact():
+    rng = random.Random(42)
+    sk = QuantileSketch.from_samples(
+        rng.lognormvariate(-2.0, 1.0) for _ in range(300))
+    wire = json.loads(json.dumps(sk.to_dict()))   # JSON-clean
+    back = QuantileSketch.from_dict(wire)
+    assert back.to_dict() == sk.to_dict()         # incl. sum: bit-exact
+    assert back.quantile(0.95) == sk.quantile(0.95)
+    with pytest.raises(ValueError, match="obs-sketch/v1"):
+        QuantileSketch.from_dict({"schema": "bogus"})
+
+
+def test_from_samples_order_independent():
+    rng = random.Random(5)
+    vals = [rng.uniform(1e-3, 10.0) for _ in range(200)]
+    shuffled = list(vals)
+    rng.shuffle(shuffled)
+    assert _state(QuantileSketch.from_samples(vals)) == _state(
+        QuantileSketch.from_samples(shuffled))
+
+
+# ---------------------------------------------------------------------------
+# SLO burn-rate windows: synthetic breach traces
+# ---------------------------------------------------------------------------
+
+#: 90% objective -> budget 0.1; an all-bad stream burns at 10x, far above
+#: the default burn_factor 2.0 (at objective 0.5 an all-bad stream burns at
+#: exactly 2.0, which is NOT strictly > 2.0 — a deliberately inert config).
+BREACH_SLO = dict(objective=0.9, threshold=1.0, long_window=16,
+                  short_window=4, min_events=4)
+
+
+def _drive(tracker, ticks, value, per_tick=2):
+    for _ in range(ticks):
+        for _ in range(per_tick):
+            tracker.observe(value)
+        tracker.tick()
+
+
+def test_sustained_breach_alerts():
+    t = SLOTracker(SLOObjective("ttft", **BREACH_SLO))
+    _drive(t, 4, 0.5)                  # healthy baseline
+    assert not t.breaching() and t.verdict() == "ok"
+    _drive(t, 8, 5.0)                  # sustained: both windows bad
+    assert t.breaching() and t.verdict() == "burning"
+    s = t.summary()
+    assert s["burn_short"] > 2.0 and s["burn_long"] > 2.0
+    assert s["verdict"] == "burning"
+
+
+def test_short_spike_does_not_alert():
+    t = SLOTracker(SLOObjective("ttft", **BREACH_SLO))
+    _drive(t, 14, 0.5)                 # long healthy history
+    _drive(t, 1, 5.0)                  # one-tick blip
+    # short window is hot but the long window holds -> no page
+    assert t.burn_rate(4) > 2.0
+    assert t.burn_rate(16) <= 2.0
+    assert not t.breaching()
+
+
+def test_recovery_clears_alert_via_short_window():
+    t = SLOTracker(SLOObjective("ttft", **BREACH_SLO))
+    _drive(t, 10, 5.0)
+    assert t.breaching()
+    _drive(t, 6, 0.5)                  # short window drains first
+    # long window still remembers the incident, short window is clean
+    assert t.burn_rate(16) > 2.0
+    assert t.burn_rate(4) == 0.0
+    assert not t.breaching()
+
+
+def test_min_events_and_no_data():
+    t = SLOTracker(SLOObjective("ttft", **BREACH_SLO))
+    assert t.verdict() == "no_data"
+    assert t.burn_rate(16) is None
+    # fewer than min_events bad samples never page
+    t.observe(5.0)
+    t.tick()
+    assert not t.breaching()
+
+
+def test_event_style_objective_and_monitor_bundle():
+    mon = SLOMonitor(default_serving_slos())
+    assert set(mon.trackers) == {"ttft", "tpot", "queue_wait", "errors"}
+    with pytest.raises(ValueError, match="no threshold"):
+        mon.observe("errors", 1.0)
+    for _ in range(8):
+        mon.observe("ttft", 0.1)
+        mon.observe_event("errors", False)   # every request errors
+        mon.tick()
+    assert mon.breaching() == ("errors",)
+    v = mon.verdicts()
+    assert v["errors"] == "burning" and v["ttft"] == "ok"
+    assert v["tpot"] == "no_data"
+    assert json.dumps(mon.summary())         # JSON-ready
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError, match="objective"):
+        SLOObjective("x", objective=1.0)
+    with pytest.raises(ValueError, match="short_window"):
+        SLOObjective("x", long_window=4, short_window=8)
+    assert SLOObjective("x", objective=0.95).budget == pytest.approx(0.05)

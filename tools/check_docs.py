@@ -36,6 +36,10 @@ SEAM_MODULES = [
     "src/repro/serve/paging.py",
     "src/repro/core/kan.py",
     "src/repro/obs/recorder.py",
+    "src/repro/obs/sketch.py",
+    "src/repro/obs/slo.py",
+    "src/repro/obs/export.py",
+    "src/repro/hw/health.py",
     "src/repro/tune/space.py",
     "src/repro/tune/pareto.py",
     "src/repro/tune/search.py",
